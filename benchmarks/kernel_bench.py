@@ -1,0 +1,74 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp fallback vs oracle.
+
+On this CPU container interpret-mode timings are NOT TPU perf — the
+numbers recorded are correctness + working-set documentation; TPU-side
+perf is covered analytically in EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.graph import random_graph
+from repro.graph.structure import graph_to_numpy
+from repro.kernels.relax import relax_pallas, relax_jnp, build_dst_tiled_layout
+from repro.kernels.flash_attention import flash_attention, attention_ref
+from repro.kernels.embedding_bag import embedding_bag, embedding_bag_jnp
+
+rng = np.random.default_rng(0)
+
+
+def _timeit(f, *a, repeats=5):
+    out = f(*a)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(*a))
+        ts.append(time.perf_counter() - t0)
+    return min(ts) * 1e6
+
+
+def bench_relax(out):
+    g = random_graph(2000, 16000, seed=1)
+    src, dst, w = graph_to_numpy(g)
+    n = g.n_vertices
+    dist = rng.uniform(0, 50, n).astype(np.float32)
+    src_t, w_t, dr_t, bp = build_dst_tiled_layout(src, dst, w, n)
+    dist_pad = jnp.asarray(np.concatenate([dist, np.full(bp - n, np.inf,
+                                                         np.float32)]))
+    t_j = _timeit(relax_jnp, jnp.asarray(dist), jnp.asarray(src),
+                  jnp.asarray(dst), jnp.asarray(w))
+    out("relax_xla[2k_v,16k_e]", t_j, "scatter-min lowering")
+    t_p = _timeit(lambda d: relax_pallas(d, src_t, w_t, dr_t), dist_pad)
+    out("relax_pallas_interp[2k_v,16k_e]", t_p,
+        "dst-tiled one-hot min (interpret mode)")
+
+
+def bench_flash(out):
+    B, H, S, D = 1, 4, 512, 64
+    q = jnp.asarray(rng.standard_normal((B, H, S, D)), jnp.float32)
+    k, v = q, q
+    t_ref = _timeit(lambda: attention_ref(q, k, v))
+    out(f"attention_ref[B{B}H{H}S{S}]", t_ref, "materialized scores")
+    t_p = _timeit(lambda: flash_attention(q, k, v))
+    out(f"flash_pallas_interp[B{B}H{H}S{S}]", t_p, "interpret mode")
+
+
+def bench_embag(out):
+    V, Dm, B, L = 50_000, 32, 1024, 4
+    table = jnp.asarray(rng.standard_normal((V, Dm)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, V, (B, L)), jnp.int32)
+    t_j = _timeit(embedding_bag_jnp, table, idx)
+    out(f"embag_xla[V{V}B{B}L{L}]", t_j, "take+masked-sum")
+    t_p = _timeit(lambda: embedding_bag(table, idx, bb=8))
+    out(f"embag_pallas_interp[V{V}B{B}L{L}]", t_p, "row-DMA gather")
+
+
+def run_all(out):
+    bench_relax(out)
+    bench_flash(out)
+    bench_embag(out)

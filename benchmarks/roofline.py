@@ -1,0 +1,87 @@
+"""Aggregate dry-run artifacts into the roofline table (EXPERIMENTS.md §Roofline).
+
+Reads benchmarks/artifacts/dryrun/*.json produced by repro.launch.dryrun.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def load_records(pattern="*.json"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(ART, pattern))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def _fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def table(multi_pod=False, out=print):
+    """Single-pod: full roofline terms. Multi-pod: compile/memory proof only
+    (its LM cells skip the unrolled FLOPs pass, so compute/useful would be
+    misleading there — the roofline table is single-pod by design)."""
+    rows = []
+    for r in load_records():
+        if r.get("multi_pod") != multi_pod:
+            continue
+        tag = f"{r['arch']} x {r['shape']}"
+        if r["status"] == "skipped":
+            rows.append((tag, "SKIP", "-", "-", "-", "-", "-", "-"))
+            continue
+        if r["status"] == "error":
+            rows.append((tag, "ERROR", "-", "-", "-", "-", "-", "-"))
+            continue
+        t = r["roofline"]
+        mem = r["memory"]["temp_bytes"]
+        if multi_pod:
+            rows.append((tag, "ok", "-", "-", _fmt_s(t["collective_s"]),
+                         "-", "-", f"{(mem or 0) / 2**30:.1f}G"))
+        else:
+            rows.append((
+                tag, t["dominant"],
+                _fmt_s(t["compute_s"]), _fmt_s(t["memory_s"]),
+                _fmt_s(t["collective_s"]),
+                f"{t['useful_ratio']:.2f}",
+                f"{t['roofline_fraction']:.2f}",
+                f"{(mem or 0) / 2**30:.1f}G",
+            ))
+    hdr = ("cell", "status" if multi_pod else "dominant", "compute",
+           "memory", "collective", "useful", "roofline-frac", "temp/dev")
+    w = [max(len(str(r[i])) for r in rows + [hdr]) for i in range(len(hdr))]
+    out("  ".join(h.ljust(w[i]) for i, h in enumerate(hdr)))
+    for r in rows:
+        out("  ".join(str(c).ljust(w[i]) for i, c in enumerate(r)))
+    return rows
+
+
+def bench_roofline(out):
+    """Benchmark-harness entry: emit one line per dry-run cell."""
+    for r in load_records():
+        if r["status"] != "ok":
+            continue
+        mesh = "multipod" if r["multi_pod"] else "singlepod"
+        t = r["roofline"]
+        out(f"roofline[{r['arch']}x{r['shape']}@{mesh}]",
+            t["bound_s"] * 1e6,
+            f"dom={t['dominant']} useful={t['useful_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    print("=== single-pod (16x16) ===")
+    table(False)
+    print()
+    print("=== multi-pod (2x16x16) ===")
+    table(True)

@@ -1,0 +1,39 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Sections:
+  - sssp_runtime / speedup / MTEPS  (paper Figs 1-2)
+  - trishla                          (paper's pruning contribution)
+  - toka                             (termination-detection comparison)
+  - local_solver                     (intra-node Dijkstra-order ablation)
+  - kernels                          (Pallas vs XLA micro)
+  - roofline                         (dry-run derived terms, if artifacts exist)
+"""
+from __future__ import annotations
+
+import sys
+
+
+def _out(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+
+    from benchmarks import sssp_bench, kernel_bench
+    if only in (None, "sssp"):
+        sssp_bench.run_all(_out)
+        from benchmarks import sssp_perf_study
+        sssp_perf_study.run(out=lambda s: print(f"# {s}"))
+    if only in (None, "kernels"):
+        kernel_bench.run_all(_out)
+    if only in (None, "roofline"):
+        try:
+            from benchmarks import roofline
+            roofline.bench_roofline(_out)
+        except Exception as e:  # artifacts may not exist yet
+            print(f"# roofline skipped: {e}")
+
+
+if __name__ == "__main__":
+    main()

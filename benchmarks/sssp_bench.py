@@ -1,0 +1,103 @@
+"""Paper §IV benchmarks (Figs 1-3 analogs), executed on CPU at reduced scale.
+
+- runtime vs number of partitions (Fig 1) and speedup (Fig 2)
+- MTEPS (million traversed edges per second)
+- Trishla effectiveness: edges pruned, relaxations saved
+- ToKa comparison: rounds + message overhead of toka0/1/2
+
+Graphs are generated analogs of the paper's four (ParMat/R-MAT synthetic,
+road grid) scaled to CPU: the paper's *shape* (vertex/edge ratio) is kept.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import SsspConfig, build_shards, solve_sim
+from repro.graph import rmat_graph, road_grid_graph, dijkstra_reference
+
+BENCH_GRAPHS = {
+    # name: builder — e/v ratios mimic graph1 (2.2), graph2 road (2.4, grid),
+    # graph3 social (38)
+    "graph1-like": lambda: rmat_graph(scale=11, edge_factor=2, seed=1),
+    "graph2-like": lambda: road_grid_graph(side=48, seed=2),
+    "graph3-like": lambda: rmat_graph(scale=9, edge_factor=24, seed=3),
+}
+
+
+def _solve_timed(sh, source, cfg, repeats=3):
+    # warmup + compile
+    dist, stats = solve_sim(sh, source, cfg)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        dist, stats = solve_sim(sh, source, cfg)
+        ts.append(time.perf_counter() - t0)
+    return dist, stats, min(ts)
+
+
+def bench_scaling(out):
+    """Fig 1/2: runtime + speedup vs partitions."""
+    for name, build in BENCH_GRAPHS.items():
+        g = build()
+        source = int(g.src[0])
+        base_t = None
+        for p in (1, 2, 4, 8, 16):
+            sh = build_shards(g, p, enumerate_triangles=False)
+            cfg = SsspConfig(prune_online=False)
+            dist, stats, t = _solve_timed(sh, source, cfg)
+            base_t = base_t or t
+            mteps = int(stats.relaxations) / t / 1e6
+            out(f"sssp_runtime[{name}][P={p}]", t * 1e6,
+                f"speedup={base_t / t:.2f} mteps={mteps:.1f} "
+                f"rounds={int(stats.rounds)}")
+
+
+def bench_trishla(out):
+    """Trishla: pruned edges + relaxation savings (paper's TEPS argument)."""
+    for name, build in BENCH_GRAPHS.items():
+        g = build()
+        source = int(g.src[0])
+        sh = build_shards(g, 8)
+        _, s0, t0 = _solve_timed(sh, source, SsspConfig(prune_online=False))
+        _, s1, t1 = _solve_timed(sh, source,
+                                 SsspConfig(prune_offline_passes=1,
+                                            prune_online=False))
+        saved = 1 - int(s1.relaxations) / max(int(s0.relaxations), 1)
+        out(f"trishla[{name}]", t1 * 1e6,
+            f"pruned={int(s1.pruned_edges)}/{g.n_edges} "
+            f"relax_saved={saved:.1%}")
+
+
+def bench_toka(out):
+    """Termination detection overhead: rounds + wall time per detector."""
+    g = BENCH_GRAPHS["graph1-like"]()
+    source = int(g.src[0])
+    sh = build_shards(g, 8, enumerate_triangles=False)
+    ref = dijkstra_reference(g, source)
+    for toka in ("toka0", "toka1", "toka2"):
+        cfg = SsspConfig(toka=toka, prune_online=False)
+        dist, stats, t = _solve_timed(sh, source, cfg)
+        ok = np.allclose(dist, ref, 1e-5, 1e-4)
+        out(f"toka[{toka}]", t * 1e6,
+            f"rounds={int(stats.rounds)} msgs={int(stats.msgs_sent)} ok={ok}")
+
+
+def bench_local_solver(out):
+    """Dijkstra-order (delta) vs blind sweeps: relaxation efficiency."""
+    g = BENCH_GRAPHS["graph2-like"]()
+    source = int(g.src[0])
+    sh = build_shards(g, 8, enumerate_triangles=False)
+    for solver, delta in (("bellman", 0.0), ("delta", 4.0), ("delta", 12.0)):
+        cfg = SsspConfig(local_solver=solver, delta=delta, prune_online=False)
+        _, stats, t = _solve_timed(sh, source, cfg)
+        out(f"local_solver[{solver}-{delta}]", t * 1e6,
+            f"relax={int(stats.relaxations)} rounds={int(stats.rounds)}")
+
+
+def run_all(out):
+    bench_scaling(out)
+    bench_trishla(out)
+    bench_toka(out)
+    bench_local_solver(out)

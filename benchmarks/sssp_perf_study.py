@@ -1,0 +1,66 @@
+"""§Perf hillclimb for the paper's technique (SP-Async itself).
+
+Ladder of configurations from paper-faithful baseline to beyond-paper:
+  A  pmin exchange (dense inter-node Bellman-Ford broadcast), blind local
+     sweeps, toka2 token ring  — the paper's algorithm, literal port
+  B  + Dijkstra-order local settling (delta)                — paper's intent
+  C  + Trishla offline pruning                               — paper's Trishla
+  D  + bucketed pre-aggregated exchange (one msg per boundary
+       vertex, improvements only)                            — beyond paper
+       (the paper's future-work "message buffering" made static)
+  E  + toka0 quiescence detection (BSP all-reduce)           — beyond paper
+
+Measured on CPU (solve_sim) over road-like and social-like graphs;
+message counts are transport-independent, wall times are CPU-relative.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import SsspConfig, build_shards, solve_sim
+from repro.graph import rmat_graph, road_grid_graph, dijkstra_reference
+
+LADDER = [
+    ("A_paper_baseline", SsspConfig(exchange="pmin", local_solver="bellman",
+                                    toka="toka2", prune_online=False)),
+    ("B_+delta", SsspConfig(exchange="pmin", local_solver="delta", delta=6.0,
+                            toka="toka2", prune_online=False)),
+    ("C_+trishla", SsspConfig(exchange="pmin", local_solver="delta", delta=6.0,
+                              toka="toka2", prune_offline_passes=1,
+                              prune_online=True)),
+    ("D_+bucket", SsspConfig(exchange="bucket", local_solver="delta",
+                             delta=6.0, toka="toka2", prune_offline_passes=1,
+                             prune_online=True)),
+    ("E_+toka0", SsspConfig(exchange="bucket", local_solver="delta", delta=6.0,
+                            toka="toka0", prune_offline_passes=1,
+                            prune_online=True)),
+]
+
+GRAPHS = {
+    "road(graph2-like)": lambda: road_grid_graph(side=40, seed=2),
+    "social(graph3-like)": lambda: rmat_graph(scale=9, edge_factor=16, seed=3),
+}
+
+
+def run(out=print):
+    for gname, build in GRAPHS.items():
+        g = build()
+        source = int(g.src[0])
+        ref = dijkstra_reference(g, source)
+        sh = build_shards(g, 8)
+        out(f"# {gname}: {g.n_vertices}v {g.n_edges}e, P=8")
+        for name, cfg in LADDER:
+            dist, stats = solve_sim(sh, source, cfg)   # compile warmup
+            t0 = time.perf_counter()
+            dist, stats = solve_sim(sh, source, cfg)
+            dt = time.perf_counter() - t0
+            ok = np.allclose(dist, ref, 1e-5, 1e-4)
+            out(f"{name:18s} t={dt*1e3:7.1f}ms rounds={int(stats.rounds):4d} "
+                f"relax={int(stats.relaxations):8d} msgs={int(stats.msgs_sent):7d} "
+                f"pruned={int(stats.pruned_edges):6d} ok={ok}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,114 @@
+"""Fault-tolerant pytree checkpointing with elastic restore.
+
+Layout (one directory per step, atomic via rename-on-commit):
+
+  <dir>/step_000123.tmp/...   while writing
+  <dir>/step_000123/
+      meta.json               {step, leaf treedef, shapes, dtypes}
+      leaf_00000.npy ...      one .npy per leaf (host-gathered)
+
+Restart semantics (what a 1000-node deployment needs):
+  - save is crash-safe: a partially-written step never has the committed
+    name, so ``latest_step`` only ever sees complete checkpoints;
+  - ``restore_checkpoint`` takes the *target* abstract tree + shardings and
+    puts each leaf onto the live mesh (``jax.device_put`` with the target
+    NamedSharding) — the checkpoint is layout-agnostic, so restore works
+    across device-count changes (elastic resume after losing a pod);
+  - ``CheckpointManager`` keeps the newest K steps and prunes older ones.
+
+On a real multi-host cluster each host would write its addressable shards
+(process-local files) — single-process here, so leaves are gathered; the
+meta/commit protocol is the part that carries over unchanged.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import numpy as np
+
+
+def _leaves_and_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    return flat, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree) -> str:
+    os.makedirs(directory, exist_ok=True)
+    name = f"step_{step:08d}"
+    tmp = os.path.join(directory, name + ".tmp")
+    final = os.path.join(directory, name)
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves, treedef = _leaves_and_paths(tree)
+    meta = {"step": step, "n_leaves": len(leaves),
+            "treedef": str(treedef),
+            "shapes": [list(np.shape(l)) for l in leaves],
+            "dtypes": [str(np.asarray(l).dtype) if not hasattr(l, "dtype")
+                       else str(l.dtype) for l in leaves]}
+    for i, leaf in enumerate(leaves):
+        np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"),
+                np.asarray(jax.device_get(leaf)))
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)          # atomic commit
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, target_tree,
+                       shardings=None):
+    """target_tree: pytree with the wanted structure (arrays or structs).
+    shardings: optional matching pytree of NamedSharding for elastic
+    placement onto the live mesh."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    flat_t, treedef = jax.tree_util.tree_flatten(target_tree)
+    leaves = []
+    for i, t in enumerate(flat_t):
+        arr = np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
+        want_dtype = getattr(t, "dtype", arr.dtype)
+        arr = arr.astype(want_dtype)
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+
+    def save(self, step: int, tree):
+        path = save_checkpoint(self.directory, step, tree)
+        self._prune()
+        return path
+
+    def _prune(self):
+        steps = sorted([int(d.split("_")[1]) for d in os.listdir(self.directory)
+                        if d.startswith("step_") and not d.endswith(".tmp")])
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"))
+
+    def latest(self) -> int | None:
+        return latest_step(self.directory)
+
+    def restore(self, target_tree, shardings=None, step: int | None = None):
+        s = step if step is not None else self.latest()
+        if s is None:
+            return None, None
+        return restore_checkpoint(self.directory, s, target_tree, shardings), s

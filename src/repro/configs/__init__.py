@@ -1,0 +1,1 @@
+from repro.configs.registry import ARCHS, SHAPES, build_cell, list_cells

@@ -1,0 +1,3 @@
+from repro.core.sssp import SsspConfig, SsspStats, solve_sim, solve_shmap, build_shmap_solver
+from repro.core.shards import SsspShards, build_shards
+from repro.core.partition import partition_1d, inter_edge_counts

@@ -1,0 +1,69 @@
+"""1-D block graph partitioning (paper §III.A).
+
+``Pid(v) = v // block`` with ``block = ceil(N / P)`` — each process keeps a
+non-empty adjacency list only for its own vertices, matching the paper's
+``Padj`` construction. Host-side numpy; one-time cost ("Graph Partition"
+phase in the paper's cost model).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.graph.structure import Graph, PartitionedGraph, graph_to_numpy
+
+
+def partition_1d(g: Graph, n_parts: int, e_max: int | None = None) -> PartitionedGraph:
+    src, dst, w = graph_to_numpy(g)
+    n = g.n_vertices
+    block = -(-n // n_parts)  # ceil
+    owner = (src // block).astype(np.int64)
+    counts = np.bincount(owner, minlength=n_parts)
+    if e_max is None:
+        e_max = max(int(counts.max()) if len(counts) else 1, 1)
+    assert e_max >= counts.max(), (e_max, counts.max())
+
+    P = n_parts
+    src_local = np.full((P, e_max), block, np.int64)       # sentinel local id
+    dst_global = np.full((P, e_max), n, np.int64)
+    dst_owner = np.zeros((P, e_max), np.int64)
+    dst_local = np.full((P, e_max), block, np.int64)
+    weight = np.full((P, e_max), np.inf, np.float32)
+    valid = np.zeros((P, e_max), bool)
+
+    order = np.argsort(owner, kind="stable")
+    s, d, ww, own = src[order], dst[order], w[order], owner[order]
+    starts = np.zeros(P + 1, np.int64)
+    np.add.at(starts, own + 1, 1)
+    starts = np.cumsum(starts)
+    for p in range(P):
+        lo, hi = starts[p], starts[p + 1]
+        k = hi - lo
+        src_local[p, :k] = s[lo:hi] - p * block
+        dst_global[p, :k] = d[lo:hi]
+        dst_owner[p, :k] = d[lo:hi] // block
+        dst_local[p, :k] = d[lo:hi] - dst_owner[p, :k] * block
+        weight[p, :k] = ww[lo:hi]
+        valid[p, :k] = True
+
+    part_ids = np.arange(P)[:, None]
+    is_cut = valid & (dst_owner != part_ids)
+
+    return PartitionedGraph(
+        src_local=jnp.asarray(src_local, jnp.int32),
+        dst_global=jnp.asarray(dst_global, jnp.int32),
+        dst_owner=jnp.asarray(dst_owner, jnp.int32),
+        dst_local=jnp.asarray(dst_local, jnp.int32),
+        weight=jnp.asarray(weight, jnp.float32),
+        valid=jnp.asarray(valid),
+        is_cut=jnp.asarray(is_cut),
+        n_vertices=n,
+        n_edges=g.n_edges,
+        n_parts=P,
+        block=int(block),
+    )
+
+
+def inter_edge_counts(pg: PartitionedGraph) -> np.ndarray:
+    """Per-partition count of cut (inter-partition) edges — ToKa1's bound."""
+    return np.asarray(jnp.sum(jnp.where(pg.valid, pg.is_cut, False), axis=1))

@@ -1,0 +1,238 @@
+"""Host-side shard preprocessing for SP-Async.
+
+Splits each partition's edges into LOCAL (dst owned by the same shard) and
+CUT (dst owned elsewhere) lists, and precomputes the *static message
+routing* for the bucketed boundary exchange:
+
+- Cut edges are grouped (host-side, one-time) by their boundary pair
+  ``(dst_owner, dst_local)``. Each unique pair is a *message slot*.
+- At runtime a shard segment-mins its cut-edge candidates into the slots
+  (pre-aggregation: one message per boundary vertex, not per edge — the
+  paper's future-work "message buffering" made static), scatters slots into
+  a ``[P, C]`` send buffer at *precomputed static positions*, and fires one
+  ``all_to_all``.
+- The receive-side index table (which local vertex each incoming slot
+  addresses) is also static: ``recv_idx[q, p, c]`` = the local vertex on
+  shard q addressed by sender p's slot c. Built here by transposition.
+
+Everything here is one-time host preprocessing — the paper's "Graph
+Partition" phase.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.structure import Graph, PartitionedGraph
+from repro.core.partition import partition_1d
+
+
+def _pad2(rows, width, fill, dtype):
+    out = np.full((len(rows), width), fill, dtype)
+    for i, r in enumerate(rows):
+        out[i, : len(r)] = r
+    return out
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SsspShards:
+    """All static per-shard state for the SP-Async solver, stacked [P, ...]."""
+
+    # local edges (dst owned by this shard)
+    loc_src: jax.Array     # [P, e_loc] int32 local ids
+    loc_dst: jax.Array     # [P, e_loc] int32 local ids
+    loc_w: jax.Array       # [P, e_loc] f32 (+inf padding)
+    # cut edges (dst owned elsewhere), grouped by (owner, dst_local)
+    cut_src: jax.Array     # [P, e_cut] int32 local ids
+    cut_w: jax.Array       # [P, e_cut] f32 (+inf padding)
+    cut_seg: jax.Array     # [P, e_cut] int32 -> slot segment id (S = padded)
+    # message slots (unique boundary pairs)
+    slot_owner: jax.Array  # [P, S] int32 destination shard
+    slot_dstl: jax.Array   # [P, S] int32 dst-local id on the destination shard
+    slot_pos: jax.Array    # [P, S] int32 position within the [P, C] send row
+    slot_valid: jax.Array  # [P, S] bool
+    # receive routing: local vertex addressed by (sender, bucket position)
+    recv_idx: jax.Array    # [P, P, C] int32 (block = invalid sentinel)
+    # Trishla triangle candidates: edge-id triples (uj to prune, ui, ij)
+    tri_uj: jax.Array      # [P, T] int32 -> index into the *combined* edge view
+    tri_ui: jax.Array      # [P, T] int32
+    tri_ij: jax.Array      # [P, T] int32
+    tri_valid: jax.Array   # [P, T] bool
+    # ToKa1 bound inputs
+    inter_edges: jax.Array  # [P] int32 per-shard cut-edge counts
+    n_vertices: int = dataclasses.field(metadata=dict(static=True))
+    n_parts: int = dataclasses.field(metadata=dict(static=True))
+    block: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def e_loc(self):
+        return self.loc_src.shape[1]
+
+    @property
+    def e_cut(self):
+        return self.cut_src.shape[1]
+
+    @property
+    def n_slots(self):
+        return self.slot_owner.shape[1]
+
+    @property
+    def bucket_cap(self):
+        return self.recv_idx.shape[2]
+
+
+def build_shards(g: Graph, n_parts: int, max_triangles_per_part: int | None = None,
+                 enumerate_triangles: bool = True) -> SsspShards:
+    pg = partition_1d(g, n_parts)
+    P, block, n = pg.n_parts, pg.block, pg.n_vertices
+
+    src_l = np.asarray(pg.src_local)
+    dst_o = np.asarray(pg.dst_owner)
+    dst_l = np.asarray(pg.dst_local)
+    w = np.asarray(pg.weight)
+    valid = np.asarray(pg.valid)
+    is_cut = np.asarray(pg.is_cut)
+
+    loc_rows_src, loc_rows_dst, loc_rows_w = [], [], []
+    cut_rows_src, cut_rows_w, cut_rows_seg = [], [], []
+    slot_rows_owner, slot_rows_dstl = [], []
+    inter_edges = np.zeros(P, np.int64)
+
+    for p in range(P):
+        lm = valid[p] & ~is_cut[p]
+        cm = valid[p] & is_cut[p]
+        loc_rows_src.append(src_l[p][lm])
+        loc_rows_dst.append(dst_l[p][lm])
+        loc_rows_w.append(w[p][lm])
+        # group cut edges by (owner, dst_local)
+        co, cl, cs, cw = dst_o[p][cm], dst_l[p][cm], src_l[p][cm], w[p][cm]
+        order = np.lexsort((cl, co))
+        co, cl, cs, cw = co[order], cl[order], cs[order], cw[order]
+        key = co.astype(np.int64) * block + cl
+        if len(key):
+            new_seg = np.ones(len(key), bool)
+            new_seg[1:] = key[1:] != key[:-1]
+            seg_id = np.cumsum(new_seg) - 1
+            u_owner = co[new_seg]
+            u_dstl = cl[new_seg]
+        else:
+            seg_id = np.zeros(0, np.int64)
+            u_owner = np.zeros(0, np.int64)
+            u_dstl = np.zeros(0, np.int64)
+        cut_rows_src.append(cs)
+        cut_rows_w.append(cw)
+        cut_rows_seg.append(seg_id)
+        slot_rows_owner.append(u_owner)
+        slot_rows_dstl.append(u_dstl)
+        inter_edges[p] = int(cm.sum())
+
+    e_loc = max(max((len(r) for r in loc_rows_src), default=0), 1)
+    e_cut = max(max((len(r) for r in cut_rows_src), default=0), 1)
+    S = max(max((len(r) for r in slot_rows_owner), default=0), 1)
+
+    # position of each slot within its destination bucket row
+    slot_pos_rows = []
+    cap = 1
+    for p in range(P):
+        owners = slot_rows_owner[p]
+        pos = np.zeros(len(owners), np.int64)
+        for q in np.unique(owners):
+            m = owners == q
+            pos[m] = np.arange(m.sum())
+            cap = max(cap, int(m.sum()))
+        slot_pos_rows.append(pos)
+    C = cap
+
+    # receive routing table: recv_idx[q, p, c] = dst_local, built by transpose
+    recv_idx = np.full((P, P, C), block, np.int64)
+    for p in range(P):
+        owners, dstl, pos = slot_rows_owner[p], slot_rows_dstl[p], slot_pos_rows[p]
+        recv_idx[owners, p, pos] = dstl
+
+    # ---- Trishla triangle candidates (host-side enumeration) --------------
+    # Combined per-shard edge view: local edges [0, e_loc) then cut edges
+    # [e_loc, e_loc + e_cut). Triangles (u, vi, vj): u and vi owned by this
+    # shard (so (vi, vj) is visible), vj arbitrary, both (u, vi), (u, vj),
+    # (vi, vj) present. Candidate to prune: (u, vj).
+    tri_rows = [[] for _ in range(P)]
+    if enumerate_triangles:
+        # per-shard edge lookup: (src_local, dst_global) -> combined edge id
+        for p in range(P):
+            lsrc, ldst, lw = loc_rows_src[p], loc_rows_dst[p], loc_rows_w[p]
+            csrc, cw_, cseg = cut_rows_src[p], cut_rows_w[p], cut_rows_seg[p]
+            # global dst of cut edges: owner*block + dst_local via slots
+            cg = (slot_rows_owner[p][cseg] * block + slot_rows_dstl[p][cseg]) if len(cseg) else np.zeros(0, np.int64)
+            all_src = np.concatenate([lsrc, csrc])            # local u ids
+            all_dstg = np.concatenate([ldst + p * block, cg]) # global v ids
+            # edge ids must match the runtime combined view, where local
+            # edges are PADDED to e_loc before the cut edges are appended
+            eid = np.concatenate([np.arange(len(lsrc)),
+                                  e_loc + np.arange(len(csrc))])
+            # adjacency (by local src) for this shard
+            order = np.argsort(all_src, kind="stable")
+            s_srt, d_srt, e_srt = all_src[order], all_dstg[order], eid[order]
+            starts = np.searchsorted(s_srt, np.arange(block + 1))
+            budget = max_triangles_per_part
+            tri = tri_rows[p]
+            for u in range(block):
+                lo, hi = starts[u], starts[u + 1]
+                if hi - lo < 2:
+                    continue
+                nbrs = d_srt[lo:hi]
+                nbr_eids = e_srt[lo:hi]
+                for a in range(len(nbrs)):
+                    vi = nbrs[a]
+                    if vi // block != p:
+                        continue  # (vi, vj) must be visible: vi owned here
+                    vi_loc = vi - p * block
+                    vlo, vhi = starts[vi_loc], starts[vi_loc + 1]
+                    vi_out = d_srt[vlo:vhi]
+                    vi_out_eids = e_srt[vlo:vhi]
+                    # intersect N(u) and N(vi)
+                    common, ia, ib = np.intersect1d(nbrs, vi_out, return_indices=True)
+                    for t in range(len(common)):
+                        vj = common[t]
+                        if vj == u + p * block or vj == vi:
+                            continue
+                        tri.append((nbr_eids[ia[t]], nbr_eids[a], vi_out_eids[ib[t]]))
+                        if budget is not None and len(tri) >= budget:
+                            break
+                    if budget is not None and len(tri) >= budget:
+                        break
+                if budget is not None and len(tri) >= budget:
+                    break
+    T = max(max((len(r) for r in tri_rows), default=0), 1)
+    tri_uj = np.full((P, T), 0, np.int64)
+    tri_ui = np.full((P, T), 0, np.int64)
+    tri_ij = np.full((P, T), 0, np.int64)
+    tri_valid = np.zeros((P, T), bool)
+    for p in range(P):
+        for k, (a, b, c) in enumerate(tri_rows[p]):
+            tri_uj[p, k], tri_ui[p, k], tri_ij[p, k] = a, b, c
+            tri_valid[p, k] = True
+
+    return SsspShards(
+        loc_src=jnp.asarray(_pad2(loc_rows_src, e_loc, block, np.int64), jnp.int32),
+        loc_dst=jnp.asarray(_pad2(loc_rows_dst, e_loc, block, np.int64), jnp.int32),
+        loc_w=jnp.asarray(_pad2(loc_rows_w, e_loc, np.inf, np.float32), jnp.float32),
+        cut_src=jnp.asarray(_pad2(cut_rows_src, e_cut, block, np.int64), jnp.int32),
+        cut_w=jnp.asarray(_pad2(cut_rows_w, e_cut, np.inf, np.float32), jnp.float32),
+        cut_seg=jnp.asarray(_pad2(cut_rows_seg, e_cut, S, np.int64), jnp.int32),
+        slot_owner=jnp.asarray(_pad2(slot_rows_owner, S, 0, np.int64), jnp.int32),
+        slot_dstl=jnp.asarray(_pad2(slot_rows_dstl, S, 0, np.int64), jnp.int32),
+        slot_pos=jnp.asarray(_pad2(slot_pos_rows, S, 0, np.int64), jnp.int32),
+        slot_valid=jnp.asarray(_pad2([np.ones(len(r), bool) for r in slot_rows_owner], S, False, bool)),
+        recv_idx=jnp.asarray(recv_idx, jnp.int32),
+        tri_uj=jnp.asarray(tri_uj, jnp.int32),
+        tri_ui=jnp.asarray(tri_ui, jnp.int32),
+        tri_ij=jnp.asarray(tri_ij, jnp.int32),
+        tri_valid=jnp.asarray(tri_valid),
+        inter_edges=jnp.asarray(inter_edges, jnp.int32),
+        n_vertices=n,
+        n_parts=P,
+        block=block,
+    )

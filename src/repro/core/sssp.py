@@ -1,0 +1,421 @@
+"""SP-Async driver (paper Algorithm 2).
+
+Round structure (one outer round = one inter-partition Bellman-Ford step):
+
+  1. *Local phase* — every shard with a non-empty frontier runs its local
+     solver to a fixpoint (the paper's intra-node Dijkstra). Idle shards
+     take the other branch of a ``lax.cond`` and evaluate a chunk of
+     Trishla triangle candidates instead (the paper's "idle processes do
+     edge elimination").
+  2. *Send phase* — candidate distances over cut edges are pre-aggregated
+     per boundary vertex (segment-min) and placed into a statically-routed
+     send buffer; only improvements over ``last_sent`` are transmitted.
+  3. *Exchange* — one collective: bucketed ``all_to_all`` (default), dense
+     ``all_reduce(min)`` (``pmin``), or dense ``all_to_all`` + local min
+     (``a2a_dense``).
+  4. *Merge phase* — incoming messages scatter-min into the local distance
+     block; improved vertices form the next frontier.
+  5. *ToKa* — termination detection (see ``core/toka.py``).
+
+Backends:
+  - ``sim``: the same phases vmapped over a stacked [P, ...] representation
+    on one device, exchanges realized as array transposes/reductions. Used
+    for correctness tests at any partition count without real devices.
+  - ``shmap``: ``jax.shard_map`` over a mesh; the outer loop is a
+    ``lax.while_loop`` *inside* the shard_map body so the whole solve is a
+    single compiled program with collectives on the wire. This is the path
+    the multi-pod dry-run lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import toka as toka_mod
+from repro.core.local_solver import local_fixpoint
+from repro.core.shards import SsspShards
+from repro.core import trishla
+from repro.distributed.collectives import (
+    all_to_all_tiled, and_reduce, flat_rank, or_reduce, ring_permute,
+)
+
+INF = jnp.float32(jnp.inf)
+
+
+@dataclasses.dataclass(frozen=True)
+class SsspConfig:
+    exchange: str = "bucket"        # bucket | pmin | a2a_dense
+    toka: str = "toka0"             # toka0 | toka1 | toka2
+    local_solver: str = "bellman"   # bellman | delta
+    delta: float = 4.0
+    local_iters: int = 10_000
+    prune_online: bool = True       # Trishla in the idle branch
+    prune_offline_passes: int = 0   # vectorized Trishla before the solve
+    tri_chunk: int = 256
+    max_rounds: int = 100_000
+
+
+class SsspStats(NamedTuple):
+    rounds: jax.Array
+    relaxations: jax.Array   # total edge relaxations (TEPS numerator)
+    msgs_sent: jax.Array
+    msgs_recv: jax.Array
+    pruned_edges: jax.Array
+
+
+class _Carry(NamedTuple):
+    dist: Any
+    active: Any
+    pruned: Any
+    tri_cursor: Any
+    last_sent: Any
+    msg_count: Any
+    toka2: Any
+    done: Any
+    rounds: Any
+    relaxations: Any
+    msgs_sent: Any
+    msgs_recv: Any
+
+
+# --------------------------------------------------------------------------
+# per-shard phases (no leading P dim; vmapped by sim, direct under shard_map)
+# --------------------------------------------------------------------------
+
+def _phase_local(shard: SsspShards, dist, active, pruned, cursor, cfg: SsspConfig):
+    """Local solve (frontier non-empty) or Trishla chunk (idle)."""
+    e_loc = shard.loc_src.shape[0]
+    idle = ~jnp.any(active)
+
+    def solve(dist, pruned, cursor):
+        res = local_fixpoint(
+            dist, active, shard.loc_src, shard.loc_dst, shard.loc_w,
+            pruned[:e_loc], solver=cfg.local_solver,
+            max_iters=cfg.local_iters, delta=cfg.delta)
+        return res.dist, pruned, cursor, res.relaxations, jnp.int32(0)
+
+    def prune(dist, pruned, cursor):
+        if not cfg.prune_online:
+            return dist, pruned, cursor, jnp.int32(0), jnp.int32(0)
+        w_all = jnp.concatenate([shard.loc_w, shard.cut_w])
+        new_pruned, new_cursor, n = trishla.prune_chunk(
+            w_all, pruned, cursor, shard.tri_uj, shard.tri_ui, shard.tri_ij,
+            shard.tri_valid, cfg.tri_chunk)
+        return dist, new_pruned, new_cursor, jnp.int32(0), n
+
+    return lax.cond(idle, prune, solve, dist, pruned, cursor)
+
+
+def _phase_send(shard: SsspShards, dist, pruned, last_sent, cfg: SsspConfig):
+    """Build the outgoing payload. Returns (payload, last_sent', sends)."""
+    e_loc = shard.loc_src.shape[0]
+    S = shard.slot_owner.shape[0]
+    Pn, C = shard.recv_idx.shape[0], shard.recv_idx.shape[1]
+
+    w_cut = jnp.where(pruned[e_loc:], INF, shard.cut_w)
+    d_src = jnp.take(dist, shard.cut_src, mode="fill", fill_value=float("inf"))
+    cand = d_src + w_cut
+    slot_val = jax.ops.segment_min(cand, shard.cut_seg, num_segments=S,
+                                   indices_are_sorted=True)
+    improved = shard.slot_valid & (slot_val < last_sent)
+    send_val = jnp.where(improved, slot_val, INF)
+    new_last = jnp.where(improved, slot_val, last_sent)
+    sends = jnp.sum(improved).astype(jnp.int32)
+
+    if cfg.exchange == "bucket":
+        payload = jnp.full((Pn, C), INF, jnp.float32)
+        payload = payload.at[shard.slot_owner, shard.slot_pos].min(send_val)
+    else:  # dense candidate vector addressed by (owner, dst_local)
+        payload = jnp.full((Pn, dist.shape[0]), INF, jnp.float32)
+        payload = payload.at[shard.slot_owner, shard.slot_dstl].min(send_val)
+    return payload, new_last, sends
+
+
+def _phase_merge(shard: SsspShards, dist, incoming, cfg: SsspConfig):
+    """Scatter-min incoming messages into the local block."""
+    if cfg.exchange == "bucket":
+        flat_val = incoming.reshape(-1)
+        flat_idx = shard.recv_idx.reshape(-1)   # sentinel = block -> dropped
+        new = dist.at[flat_idx].min(flat_val, mode="drop")
+        recvs = jnp.sum(jnp.isfinite(flat_val)).astype(jnp.int32)
+    else:
+        new = jnp.minimum(dist, incoming)
+        recvs = jnp.sum(incoming < dist).astype(jnp.int32)
+    new_active = new < dist
+    return new, new_active, recvs
+
+
+# --------------------------------------------------------------------------
+# communication backends
+# --------------------------------------------------------------------------
+
+class ShmapComm:
+    """Collectives inside a shard_map body (axis_names = flattened ring)."""
+
+    def __init__(self, axis_names):
+        self.axes = tuple(axis_names)
+
+    def rank(self):
+        return flat_rank(self.axes)
+
+    def exchange(self, payload, cfg: SsspConfig):
+        if cfg.exchange == "bucket":
+            return all_to_all_tiled(payload, self.axes)          # [P, C]
+        if cfg.exchange == "pmin":
+            merged = lax.pmin(payload, self.axes)                # [P, block]
+            return lax.dynamic_index_in_dim(merged, self.rank(), 0,
+                                            keepdims=False)
+        if cfg.exchange == "a2a_dense":
+            recv = all_to_all_tiled(payload, self.axes)          # [P, block]
+            return jnp.min(recv, axis=0)
+        raise ValueError(cfg.exchange)
+
+    def ring(self, tok):
+        return ring_permute(tok, self.axes)
+
+    def all_any(self, flag):
+        return or_reduce(flag, self.axes)
+
+    def all_all(self, flag):
+        return and_reduce(flag, self.axes)
+
+    def total(self, x):
+        return lax.psum(x, self.axes)
+
+
+class SimComm:
+    """Same contracts on stacked [P, ...] arrays (single-device simulator)."""
+
+    def __init__(self, n_parts: int):
+        self.P = n_parts
+
+    def rank(self):
+        return jnp.arange(self.P, dtype=jnp.int32)
+
+    def exchange(self, payload, cfg: SsspConfig):
+        # payload: [P_src, P_dst, *] stacked over senders
+        if cfg.exchange == "bucket":
+            return jnp.swapaxes(payload, 0, 1)                    # [P_dst, P_src, C]
+        # dense: [P_src, P_owner, block] -> per-owner min over senders
+        return jnp.min(payload, axis=0)                           # [P_owner, block]
+
+    def ring(self, tok):
+        return jax.tree_util.tree_map(lambda x: jnp.roll(x, 1, axis=0), tok)
+
+    def all_any(self, flag):
+        return jnp.broadcast_to(jnp.any(flag), flag.shape)
+
+    def all_all(self, flag):
+        return jnp.broadcast_to(jnp.all(flag), flag.shape)
+
+    def total(self, x):
+        return jnp.broadcast_to(jnp.sum(x, axis=0), x.shape)
+
+
+# --------------------------------------------------------------------------
+# round + termination (shared logic, comm-parameterized)
+# --------------------------------------------------------------------------
+
+def _toka_done(cfg, comm, carry, new_active, sends, recvs, inter_edges, n_parts,
+               rank, vmapped: bool):
+    idle = ~_vany(new_active, vmapped)
+    quiescent = comm.all_all(idle)
+    if cfg.toka == "toka0":
+        return quiescent, carry.toka2
+    if cfg.toka == "toka1":
+        vote = toka_mod.toka1_vote(carry.msg_count + recvs, inter_edges, n_parts)
+        return quiescent | comm.all_all(vote), carry.toka2
+    if cfg.toka == "toka2":
+        # Safra's counter invariant (sum of sent-received returns to 0)
+        # only holds for message transports. The dense exchanges (pmin /
+        # a2a_dense) are broadcasts — a sent improvement is not 1:1 with a
+        # counted receive — so they run the color-only DFG variant
+        # (counters zeroed; sound under BSP where nothing is in flight at
+        # round boundaries). Found by the §Perf study: with counters, the
+        # ring never observes a zero sum and toka2 spins to max_rounds.
+        if cfg.exchange == "bucket":
+            acct = _vcall(toka_mod.toka2_account, vmapped, carry.toka2,
+                          sends, recvs)
+        else:
+            zero = jnp.zeros_like(sends)
+            acct = _vcall(toka_mod.toka2_account, vmapped, carry.toka2,
+                          jnp.minimum(sends, 1) * 0 + zero, zero)
+            # blacken on send still applies (color drives termination)
+            color = jnp.where(sends > 0, jnp.int32(1), acct.color)
+            acct = acct._replace(color=color)
+        st, outgoing = _vcall(partial(toka_mod.toka2_forward, n_parts=n_parts),
+                              vmapped, acct, rank, idle)
+        incoming = comm.ring(outgoing)
+        st = _vcall(toka_mod.toka2_absorb, vmapped, st, incoming)
+        return comm.all_all(st.seen_red), st
+    raise ValueError(cfg.toka)
+
+
+def _vany(x, vmapped):
+    return jnp.any(x, axis=-1) if not vmapped else jnp.any(x, axis=tuple(range(1, x.ndim)))
+
+
+def _vcall(fn, vmapped, *args):
+    return jax.vmap(fn)(*args) if vmapped else fn(*args)
+
+
+def _make_round(shard_or_stack: SsspShards, cfg: SsspConfig, comm, vmapped: bool,
+                n_parts: int):
+    """Returns round(carry) -> carry, shared by both backends.
+
+    ``vmapped=True``: per-shard phases are vmapped over stacked arrays.
+    ``vmapped=False``: phases run directly on a single shard's slice
+    (inside shard_map)."""
+    sh = shard_or_stack
+
+    local_f = partial(_phase_local, cfg=cfg)
+    send_f = partial(_phase_send, cfg=cfg)
+    merge_f = partial(_phase_merge, cfg=cfg)
+    if vmapped:
+        local_f = jax.vmap(local_f)
+        send_f = jax.vmap(send_f)
+        merge_f = jax.vmap(merge_f)
+
+    def rounds_fn(carry: _Carry) -> _Carry:
+        dist, pruned, cursor, nrel, nprune = local_f(
+            sh, carry.dist, carry.active, carry.pruned, carry.tri_cursor)
+        payload, last_sent, sends = send_f(sh, dist, pruned, carry.last_sent)
+        incoming = comm.exchange(payload, cfg)
+        dist, new_active, recvs = merge_f(sh, dist, incoming)
+        done, toka2 = _toka_done(cfg, comm, carry, new_active, sends, recvs,
+                                 sh.inter_edges, n_parts, comm.rank(), vmapped)
+        return _Carry(
+            dist=dist, active=new_active, pruned=pruned, tri_cursor=cursor,
+            last_sent=last_sent, msg_count=carry.msg_count + recvs,
+            toka2=toka2, done=done, rounds=carry.rounds + 1,
+            relaxations=carry.relaxations + nrel.astype(jnp.int32),
+            msgs_sent=carry.msgs_sent + sends.astype(jnp.int32),
+            msgs_recv=carry.msgs_recv + recvs.astype(jnp.int32))
+
+    return rounds_fn
+
+
+def _init_carry(sh: SsspShards, source: int, cfg: SsspConfig, rank, vmapped: bool):
+    """Stacked init (sim) or per-shard init (shard_map)."""
+    block = sh.block
+    n_parts = sh.n_parts
+    src_owner = source // block
+    src_local = source % block
+
+    if vmapped:
+        Pn = n_parts
+        dist = jnp.full((Pn, block), INF, jnp.float32)
+        dist = dist.at[src_owner, src_local].set(0.0)
+        active = jnp.zeros((Pn, block), bool).at[src_owner, src_local].set(True)
+        e_all = sh.loc_w.shape[1] + sh.cut_w.shape[1]
+        pruned = jnp.zeros((Pn, e_all), bool)
+        last_sent = jnp.full((Pn, sh.slot_owner.shape[1]), INF, jnp.float32)
+        zero = jnp.zeros((Pn,), jnp.int32)
+        zero32 = jnp.zeros((Pn,), jnp.int32)
+        toka2 = jax.vmap(toka_mod.toka2_init)(jnp.arange(Pn, dtype=jnp.int32))
+        done = jnp.zeros((), bool)
+    else:
+        dist = jnp.full((block,), INF, jnp.float32)
+        mine = rank == src_owner
+        dist = dist.at[src_local].set(jnp.where(mine, 0.0, INF))
+        active = jnp.zeros((block,), bool).at[src_local].set(mine)
+        e_all = sh.loc_w.shape[0] + sh.cut_w.shape[0]
+        pruned = jnp.zeros((e_all,), bool)
+        last_sent = jnp.full((sh.slot_owner.shape[0],), INF, jnp.float32)
+        zero = jnp.zeros((), jnp.int32)
+        zero32 = jnp.zeros((), jnp.int32)
+        toka2 = toka_mod.toka2_init(rank)
+        done = jnp.zeros((), bool)
+
+    if cfg.prune_offline_passes > 0:
+        off = partial(trishla.prune_offline, n_passes=cfg.prune_offline_passes)
+        if vmapped:
+            pruned = jax.vmap(off)(sh.loc_w, sh.cut_w, sh.tri_uj, sh.tri_ui,
+                                   sh.tri_ij, sh.tri_valid)
+        else:
+            pruned = off(sh.loc_w, sh.cut_w, sh.tri_uj, sh.tri_ui, sh.tri_ij,
+                         sh.tri_valid)
+
+    return _Carry(dist=dist, active=active, pruned=pruned, tri_cursor=zero,
+                  last_sent=last_sent, msg_count=zero, toka2=toka2, done=done,
+                  rounds=jnp.zeros((), jnp.int32) if not vmapped else jnp.zeros((), jnp.int32),
+                  relaxations=zero32, msgs_sent=zero32, msgs_recv=zero32)
+
+
+# --------------------------------------------------------------------------
+# public entry points
+# --------------------------------------------------------------------------
+
+def solve_sim(sh: SsspShards, source: int, cfg: SsspConfig = SsspConfig()):
+    """Single-device simulator: python outer loop, jitted round."""
+    comm = SimComm(sh.n_parts)
+    round_fn = jax.jit(_make_round(sh, cfg, comm, vmapped=True,
+                                   n_parts=sh.n_parts))
+    carry = _init_carry(sh, source, cfg, rank=None, vmapped=True)
+    r = 0
+    while r < cfg.max_rounds:
+        carry = round_fn(carry)
+        r += 1
+        if bool(carry.done if carry.done.ndim == 0 else carry.done.all()):
+            break
+    dist = np.asarray(carry.dist).reshape(-1)[: sh.n_vertices]
+    stats = SsspStats(
+        rounds=jnp.int32(r),
+        relaxations=jnp.sum(carry.relaxations),
+        msgs_sent=jnp.sum(carry.msgs_sent),
+        msgs_recv=jnp.sum(carry.msgs_recv),
+        pruned_edges=jnp.sum(carry.pruned))
+    return dist, stats
+
+
+def build_shmap_solver(sh_spec: SsspShards, cfg: SsspConfig, mesh,
+                       axis_names, source: int):
+    """Returns a jittable fn(shards_stacked) -> (dist [P, block], stats).
+
+    The outer round loop is a lax.while_loop inside the shard_map body; the
+    whole solve compiles to one XLA program (this is what the dry-run
+    lowers for the production meshes).
+    """
+    axes = tuple(axis_names)
+    n_parts = sh_spec.n_parts
+    comm = ShmapComm(axes)
+
+    def body(sh_local: SsspShards):
+        sh1 = jax.tree_util.tree_map(lambda x: x[0], sh_local)  # strip P dim
+        # recv_idx arrives as [1, P, C] -> [P, C]; inter_edges scalar
+        rank = comm.rank()
+        carry = _init_carry(sh1, source, cfg, rank=rank, vmapped=False)
+        round_fn = _make_round(sh1, cfg, comm, vmapped=False, n_parts=n_parts)
+
+        def cond(c: _Carry):
+            return (~c.done) & (c.rounds < cfg.max_rounds)
+
+        carry = lax.while_loop(cond, round_fn, carry)
+        stats = SsspStats(
+            rounds=carry.rounds,
+            relaxations=comm.total(carry.relaxations),
+            msgs_sent=comm.total(carry.msgs_sent),
+            msgs_recv=comm.total(carry.msgs_recv),
+            pruned_edges=comm.total(jnp.sum(carry.pruned).astype(jnp.int32)))
+        return carry.dist[None], stats  # restore leading P dim
+
+    pspec = P(axes)
+    rspec = P()
+    in_specs = jax.tree_util.tree_map(lambda _: pspec, sh_spec)
+    out_specs = (pspec, SsspStats(rspec, rspec, rspec, rspec, rspec))
+    return jax.jit(jax.shard_map(body, mesh=mesh, in_specs=(in_specs,),
+                                 out_specs=out_specs, check_vma=False))
+
+
+def solve_shmap(sh: SsspShards, source: int, cfg: SsspConfig, mesh, axis_names):
+    solver = build_shmap_solver(sh, cfg, mesh, axis_names, source)
+    dist, stats = solver(sh)
+    dist = np.asarray(dist).reshape(-1)[: sh.n_vertices]
+    return dist, stats

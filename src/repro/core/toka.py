@@ -1,0 +1,141 @@
+"""ToKa — termination detection for the asynchronous SSSP (paper §III.D).
+
+Three detectors:
+
+- ``toka0`` (BSP baseline, not in the paper): global quiescence via one
+  all-reduce of "any shard still has work". Under a lock-step runtime this
+  is exact and cheapest; it is the yardstick the paper's detectors are
+  benchmarked against.
+- ``toka1`` (paper Algorithm 4): the message-budget heuristic. Each shard
+  counts received messages; when ``msg_count >= n_parts * n_inter_edges``
+  it votes to stop. The run terminates when every shard has either
+  exhausted its budget or the graph is globally quiescent.
+- ``toka2`` (paper Algorithm 5): the Dijkstra-Feijen-van-Gasteren /
+  Safra-style token ring, executed literally: white/black shard colors +
+  send/receive counters; a (state, count, hops) token circulates one hop
+  per round over the device ring (``collective-permute`` on ICI); a full
+  white, zero-count circuit triggers a red token which every shard must
+  observe before the outer loop exits.
+
+Color convention (paper text): a shard turns BLACK when it *sends* distance
+updates and decrements its counter per message sent; it increments the
+counter per message received; forwarding the token resets the shard to
+white (DFG rule). Under BSP no messages are in flight at round boundaries,
+so counters sum to zero globally at every check — the color mechanism does
+the real work; counters are kept for fidelity (and would matter on a truly
+asynchronous transport).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+WHITE, BLACK, RED = jnp.int32(0), jnp.int32(1), jnp.int32(2)
+
+
+class Toka2State(NamedTuple):
+    color: jax.Array      # int32 scalar (WHITE/BLACK)
+    count: jax.Array      # int32 scalar (recv - send, cumulative)
+    has_token: jax.Array  # bool scalar
+    tok_state: jax.Array  # int32 scalar
+    tok_count: jax.Array  # int32 scalar
+    tok_hops: jax.Array   # int32 scalar
+    seen_red: jax.Array   # bool scalar
+
+
+class Token(NamedTuple):
+    present: jax.Array
+    state: jax.Array
+    count: jax.Array
+    hops: jax.Array
+
+
+def empty_token():
+    return Token(jnp.bool_(False), WHITE, jnp.int32(0), jnp.int32(0))
+
+
+def toka2_init(rank) -> Toka2State:
+    """rank is a traced or concrete scalar; shard 0 starts with the token."""
+    has = rank == 0
+    return Toka2State(
+        color=WHITE, count=jnp.int32(0),
+        has_token=jnp.asarray(has),
+        tok_state=WHITE, tok_count=jnp.int32(0), tok_hops=jnp.int32(0),
+        seen_red=jnp.bool_(False),
+    )
+
+
+def toka2_account(state: Toka2State, sends, recvs) -> Toka2State:
+    """Per-round send/receive accounting (paper: blacken+decrement on send,
+    increment on receive)."""
+    sends = sends.astype(jnp.int32)
+    recvs = recvs.astype(jnp.int32)
+    color = jnp.where(sends > 0, BLACK, state.color)
+    count = state.count - sends + recvs
+    return state._replace(color=color, count=count)
+
+
+def toka2_forward(state: Toka2State, rank, idle, *, n_parts: int) -> tuple[Toka2State, Token]:
+    """Decide whether/what to forward this round. Returns (state', outgoing)."""
+    P = jnp.int32(n_parts)
+    is_init = rank == 0
+    holder = state.has_token
+
+    # --- red token: mark seen, always forward (system is already quiescent)
+    red_case = holder & (state.tok_state == RED)
+
+    # --- initiator with a returned token (full circuit) and locally idle
+    returned = holder & is_init & idle & (state.tok_hops >= P) & ~red_case
+    terminate = returned & (state.tok_state == WHITE) & \
+        ((state.tok_count + state.count) == 0) & (state.color == WHITE)
+    reinit = returned & ~terminate
+
+    # --- initiator launching the first probe (hops == 0) and idle
+    launch = holder & is_init & idle & (state.tok_hops == 0) & ~red_case
+
+    # --- ordinary shard forwarding: merge color/count, reset to white
+    ordinary = holder & ~is_init & idle & ~red_case
+
+    forwarding = red_case | terminate | reinit | launch | ordinary
+
+    out_state = jnp.where(
+        red_case | terminate, RED,
+        jnp.where(reinit | launch, WHITE,
+                  jnp.maximum(state.tok_state, state.color)))
+    out_count = jnp.where(red_case | terminate | reinit | launch,
+                          jnp.int32(0), state.tok_count + state.count)
+    out_hops = jnp.where(terminate | reinit | launch, jnp.int32(1),
+                         state.tok_hops + 1)
+
+    outgoing = Token(present=forwarding, state=out_state,
+                     count=out_count, hops=out_hops)
+
+    # forwarding resets the shard to white (DFG); it gives the token away
+    new_color = jnp.where(ordinary | reinit | launch, WHITE, state.color)
+    new_seen = state.seen_red | (holder & (state.tok_state == RED)) | terminate
+    new_state = state._replace(
+        color=new_color,
+        has_token=holder & ~forwarding,
+        seen_red=new_seen,
+    )
+    return new_state, outgoing
+
+
+def toka2_absorb(state: Toka2State, incoming: Token) -> Toka2State:
+    """Adopt an incoming token (at most one is live in the ring)."""
+    take = incoming.present
+    return state._replace(
+        has_token=state.has_token | take,
+        tok_state=jnp.where(take, incoming.state, state.tok_state),
+        tok_count=jnp.where(take, incoming.count, state.tok_count),
+        tok_hops=jnp.where(take, incoming.hops, state.tok_hops),
+        seen_red=state.seen_red | (take & (incoming.state == RED)),
+    )
+
+
+def toka1_vote(msg_count, inter_edges, n_parts: int):
+    """Paper Algorithm 4: stop when msg_count >= n_parts * inter_edges."""
+    bound = jnp.int32(n_parts) * jnp.maximum(inter_edges.astype(jnp.int32), 1)
+    return msg_count >= bound

@@ -1,0 +1,2 @@
+from repro.data.pipelines import (
+    TokenStream, GraphBatcher, RecsysBatcher, synthetic_lm_batch)

@@ -1,0 +1,4 @@
+from repro.distributed.collectives import (
+    ring_permute, flat_rank, all_to_all_tiled, pmin_named, pmax_named, psum_named,
+    all_reduce_min, and_reduce, or_reduce,
+)

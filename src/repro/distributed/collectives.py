@@ -1,0 +1,98 @@
+"""Collective helpers used inside ``shard_map`` bodies.
+
+All helpers take ``axis_names`` — a tuple of mesh axis names over which the
+logical 1-D partition axis is flattened (e.g. ``("data", "model")`` for the
+single-pod 16×16 mesh, ``("pod", "data", "model")`` multi-pod). Ranks follow
+row-major order over those axes, so ``flat_rank`` is consistent with how a
+``[P, ...]``-leading array is laid out by ``shard_map`` in_specs.
+"""
+from __future__ import annotations
+
+from functools import reduce
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def axis_sizes(axis_names) -> tuple[int, ...]:
+    return tuple(lax.axis_size(a) for a in axis_names)
+
+
+def flat_rank(axis_names) -> jax.Array:
+    """Row-major flattened rank over the given mesh axes."""
+    r = jnp.int32(0)
+    for a in axis_names:
+        r = r * lax.axis_size(a) + lax.axis_index(a)
+    return r
+
+
+def flat_size(axis_names) -> int:
+    return int(reduce(lambda x, y: x * y, axis_sizes(axis_names), 1))
+
+
+def pmin_named(x, axis_names):
+    return lax.pmin(x, axis_names)
+
+
+def pmax_named(x, axis_names):
+    return lax.pmax(x, axis_names)
+
+
+def psum_named(x, axis_names):
+    return lax.psum(x, axis_names)
+
+
+def all_reduce_min(x, axis_names):
+    return lax.pmin(x, axis_names)
+
+
+def or_reduce(flag, axis_names):
+    """Logical OR across shards (any)."""
+    return lax.pmax(flag.astype(jnp.int32), axis_names) > 0
+
+
+def and_reduce(flag, axis_names):
+    """Logical AND across shards (all)."""
+    return lax.pmin(flag.astype(jnp.int32), axis_names) > 0
+
+
+def all_to_all_tiled(x, axis_names):
+    """all_to_all where dim 0 of ``x`` is the (flattened) partition dim.
+
+    x: [P, ...] per shard → returns [P, ...] where row p came from shard p's
+    row ``self``. Works over a tuple of axis names (XLA flattens them in
+    row-major order, matching ``flat_rank``).
+    """
+    return lax.all_to_all(x, axis_names, split_axis=0, concat_axis=0, tiled=True)
+
+
+def ring_permute(x, axis_names):
+    """Advance ``x`` one hop along the row-major ring over ``axis_names``.
+
+    After the call, the value previously held by rank r lives on rank
+    (r + 1) mod P. This is the literal token-ring transport for ToKa2 —
+    on TPU it lowers to collective-permutes over the ICI.
+
+    Implementation: a +1 shift on the last axis, with carry shifts on the
+    earlier axes applied only to ranks whose lower-order indices wrapped to
+    zero (i.e. the carry positions).
+    """
+    names = tuple(axis_names)
+    sizes = axis_sizes(names)
+
+    def shift(v, name, size):
+        perm = [(i, (i + 1) % size) for i in range(size)]
+        return lax.ppermute(v, name, perm)
+
+    # shift along the last axis; values that wrapped (arrived at index 0)
+    # must additionally be shifted along the next-more-significant axis,
+    # cascading leftward.
+    y = shift(x, names[-1], sizes[-1])
+    carry_mask = lax.axis_index(names[-1]) == 0
+    for k in range(len(names) - 2, -1, -1):
+        y_carry = shift(y, names[k], sizes[k])
+        y = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(carry_mask, b, a), y, y_carry)
+        carry_mask = carry_mask & (lax.axis_index(names[k]) == 0)
+    return y

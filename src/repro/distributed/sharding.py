@@ -1,0 +1,40 @@
+"""Mesh-axis conventions shared by all architectures.
+
+Single-pod mesh: (data=16, model=16). Multi-pod: (pod=2, data=16, model=16)
+— the pod axis joins the data/FSDP group (pure DP across pods keeps
+cross-pod traffic to one gradient all-reduce per step, the right choice
+when inter-pod links are the scarce resource).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    data: tuple          # axes carrying batch/FSDP shards, e.g. ("pod","data")
+    model: str = "model"
+    data_shards: int = 1  # product of data-axis sizes (static hierarchy hint
+                          # for shard-local algorithms, e.g. MoE dispatch)
+
+    @property
+    def all(self):
+        return (*self.data, self.model)
+
+    # common activation/param specs
+    def batch(self, *rest):
+        return P(self.data, *rest)
+
+    def fsdp_tp(self, *, prefix=()):
+        """[..., fsdp_dim, tp_dim] param spec."""
+        return P(*prefix, self.data, self.model)
+
+
+SINGLE_POD = MeshAxes(data=("data",), data_shards=16)
+MULTI_POD = MeshAxes(data=("pod", "data"), data_shards=32)
+
+
+def mesh_axes(multi_pod: bool) -> MeshAxes:
+    return MULTI_POD if multi_pod else SINGLE_POD

@@ -1,0 +1,3 @@
+from repro.graph.structure import Graph, PartitionedGraph, csr_from_coo
+from repro.graph.generators import rmat_graph, road_grid_graph, random_graph, assign_weights
+from repro.graph.reference import dijkstra_reference, bellman_ford_reference

@@ -1,0 +1,112 @@
+"""Graph generators.
+
+The paper evaluates on ParMat/R-MAT synthetic graphs plus the USA road map.
+We provide:
+  - ``rmat_graph``: R-MAT (the generator behind ParMat) — scale-free graphs.
+  - ``road_grid_graph``: 2-D grid with diagonal shortcuts — road-network-like
+    (bounded degree, large diameter), the Graph2 stand-in.
+  - ``random_graph``: Erdos-Renyi-ish uniform random edges.
+  - ``assign_weights``: U[1, 20) weights, matching the paper's setup.
+All generation is numpy (host-side, one-time cost, same as the paper's
+"graph processing" phase).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graph.structure import Graph, csr_from_coo
+
+
+def assign_weights(n_edges: int, rng: np.random.Generator,
+                   low: float = 1.0, high: float = 20.0) -> np.ndarray:
+    """Paper §IV.A: pseudo-random weights uniform in [1, 20)."""
+    return rng.uniform(low, high, size=n_edges).astype(np.float32)
+
+
+def rmat_graph(scale: int, edge_factor: int = 16, seed: int = 0,
+               a: float = 0.57, b: float = 0.19, c: float = 0.19,
+               undirected: bool = True, e_pad: int | None = None) -> Graph:
+    """R-MAT generator (Graph500 parameters by default). n = 2**scale."""
+    rng = np.random.default_rng(seed)
+    n = 1 << scale
+    m = n * edge_factor
+    src = np.zeros(m, np.int64)
+    dst = np.zeros(m, np.int64)
+    for level in range(scale):
+        r = rng.random(m)
+        # quadrant probabilities a, b, c, d
+        go_right = (r >= a) & (r < a + b) | (r >= a + b + c)
+        go_down = r >= a + b
+        src |= (go_down.astype(np.int64) << (scale - 1 - level))
+        dst |= (go_right.astype(np.int64) << (scale - 1 - level))
+    # permute vertex ids to break degree locality
+    perm = rng.permutation(n)
+    src, dst = perm[src], perm[dst]
+    keep = src != dst  # drop self loops
+    src, dst = src[keep], dst[keep]
+    w = assign_weights(len(src), rng)
+    if undirected:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+        w = np.concatenate([w, w])
+    return csr_from_coo(src, dst, w, n, e_pad=e_pad)
+
+
+def road_grid_graph(side: int, seed: int = 0, diag_prob: float = 0.1,
+                    e_pad: int | None = None) -> Graph:
+    """side×side grid, bidirectional edges, a few diagonals. Road-like."""
+    rng = np.random.default_rng(seed)
+    n = side * side
+    ii, jj = np.meshgrid(np.arange(side), np.arange(side), indexing="ij")
+    vid = (ii * side + jj).ravel()
+    srcs, dsts = [], []
+    # right and down neighbours
+    right = vid.reshape(side, side)[:, :-1].ravel()
+    srcs.append(right); dsts.append(right + 1)
+    down = vid.reshape(side, side)[:-1, :].ravel()
+    srcs.append(down); dsts.append(down + side)
+    # sparse diagonals
+    diag = vid.reshape(side, side)[:-1, :-1].ravel()
+    mask = rng.random(diag.shape[0]) < diag_prob
+    srcs.append(diag[mask]); dsts.append(diag[mask] + side + 1)
+    src = np.concatenate(srcs); dst = np.concatenate(dsts)
+    w = assign_weights(len(src), rng)
+    src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+    w = np.concatenate([w, w])
+    return csr_from_coo(src, dst, w, n, e_pad=e_pad)
+
+
+def random_graph(n: int, m: int, seed: int = 0, undirected: bool = True,
+                 e_pad: int | None = None, ensure_connected_from: int | None = 0) -> Graph:
+    """Uniform random directed multigraph (deduped), optional spanning chain.
+
+    ``ensure_connected_from=s`` adds a random permutation chain so every
+    vertex is reachable from s — keeps correctness tests deterministic
+    (finite distances everywhere).
+    """
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    if ensure_connected_from is not None:
+        order = rng.permutation(n)
+        pos = int(np.where(order == ensure_connected_from)[0][0])
+        order = np.roll(order, -pos)  # chain starts at the source vertex
+        src = np.concatenate([src, order[:-1]])
+        dst = np.concatenate([dst, order[1:]])
+    w = assign_weights(len(src), rng)
+    if undirected:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+        w = np.concatenate([w, w])
+    return csr_from_coo(src, dst, w, n, e_pad=e_pad)
+
+
+# ---- paper graph descriptors (full-scale; used by the dry-run only) -------
+
+PAPER_GRAPHS = {
+    # name: (n_vertices, n_edges, comment)
+    "graph1": (391_529, 873_775, "small synthetic (ParMat)"),
+    "graph2": (23_947_347, 58_333_344, "USA road network"),
+    "graph3": (3_072_441, 117_185_083, "Orkut-like social network"),
+    "graph4": (41_700_000, 1_470_000_000, "Twitter-like (41.7M v, 1.47B e)"),
+}

@@ -1,0 +1,128 @@
+"""Static-shape graph containers.
+
+Everything is padded to fixed sizes so the structures flow through jit /
+shard_map without retracing. Edges are directed; an undirected graph stores
+both directions explicitly.
+
+Conventions
+-----------
+- ``src``/``dst`` are int32 vertex ids, ``weight`` float32.
+- Padding edges use ``src = dst = n_vertices`` (a sentinel vertex) and
+  ``weight = +inf`` so they never win a min-plus relaxation; a boolean
+  ``valid`` mask is also kept for reductions that need it.
+- CSR is "sorted-COO + row offsets": edges sorted by src, plus
+  ``row_ptr[n_vertices + 1]``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INF = jnp.float32(jnp.inf)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """A whole (unpartitioned) graph in padded COO, sorted by src (CSR-like)."""
+
+    src: jax.Array          # [e_pad] int32
+    dst: jax.Array          # [e_pad] int32
+    weight: jax.Array       # [e_pad] float32
+    row_ptr: jax.Array      # [n+1] int32 (offsets into sorted edge list)
+    n_vertices: int = dataclasses.field(metadata=dict(static=True))
+    n_edges: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def e_pad(self) -> int:
+        return self.src.shape[0]
+
+    @property
+    def valid(self) -> jax.Array:
+        return jnp.arange(self.e_pad, dtype=jnp.int32) < self.n_edges
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PartitionedGraph:
+    """1-D block partition of a Graph over P shards (paper §III.A).
+
+    Vertex v is owned by shard ``v // block`` with ``block = ceil(n/P)``.
+    Every per-shard array is padded to the max across shards so the stacked
+    [P, ...] arrays are rectangular and can be sharded with shard_map.
+
+    Edge arrays are *local* COO sorted by local src:
+      - ``src_local``: src id within the shard (0..block-1)
+      - ``dst_global``: global dst id (may be owned by another shard)
+      - ``dst_owner``: shard id owning dst
+      - ``dst_local``: dst id within its owner's block
+    """
+
+    src_local: jax.Array    # [P, e_max] int32
+    dst_global: jax.Array   # [P, e_max] int32
+    dst_owner: jax.Array    # [P, e_max] int32
+    dst_local: jax.Array    # [P, e_max] int32
+    weight: jax.Array       # [P, e_max] float32
+    valid: jax.Array        # [P, e_max] bool
+    is_cut: jax.Array       # [P, e_max] bool  (dst owned by another shard)
+    n_vertices: int = dataclasses.field(metadata=dict(static=True))
+    n_edges: int = dataclasses.field(metadata=dict(static=True))
+    n_parts: int = dataclasses.field(metadata=dict(static=True))
+    block: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def e_max(self) -> int:
+        return self.src_local.shape[1]
+
+    @property
+    def n_cut_edges(self):
+        return int(np.asarray(jnp.sum(jnp.where(self.valid, self.is_cut, False))))
+
+
+def csr_from_coo(src: np.ndarray, dst: np.ndarray, weight: np.ndarray,
+                 n_vertices: int, e_pad: int | None = None,
+                 dedup: bool = True) -> Graph:
+    """Sort COO by (src, dst), optionally dedup keeping min weight, pad."""
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    weight = np.asarray(weight, np.float32)
+    order = np.lexsort((dst, src))
+    src, dst, weight = src[order], dst[order], weight[order]
+    if dedup and len(src):
+        # keep min weight among duplicate (src, dst)
+        key = src * n_vertices + dst
+        # within equal keys, keep the smallest weight: sort by (key, weight)
+        o2 = np.lexsort((weight, key))
+        key, src, dst, weight = key[o2], src[o2], dst[o2], weight[o2]
+        keep = np.ones(len(key), bool)
+        keep[1:] = key[1:] != key[:-1]
+        src, dst, weight = src[keep], dst[keep], weight[keep]
+    n_edges = len(src)
+    if e_pad is None:
+        e_pad = max(n_edges, 1)
+    assert e_pad >= n_edges
+    pad = e_pad - n_edges
+    src_p = np.concatenate([src, np.full(pad, n_vertices, np.int64)])
+    dst_p = np.concatenate([dst, np.full(pad, n_vertices, np.int64)])
+    w_p = np.concatenate([weight, np.full(pad, np.inf, np.float32)])
+    row_ptr = np.zeros(n_vertices + 1, np.int64)
+    np.add.at(row_ptr, src + 1, 1)
+    row_ptr = np.cumsum(row_ptr)
+    return Graph(
+        src=jnp.asarray(src_p, jnp.int32),
+        dst=jnp.asarray(dst_p, jnp.int32),
+        weight=jnp.asarray(w_p, jnp.float32),
+        row_ptr=jnp.asarray(row_ptr, jnp.int32),
+        n_vertices=int(n_vertices),
+        n_edges=int(n_edges),
+    )
+
+
+def graph_to_numpy(g: Graph):
+    """Valid (src, dst, weight) as numpy."""
+    e = g.n_edges
+    return (np.asarray(g.src[:e]), np.asarray(g.dst[:e]), np.asarray(g.weight[:e]))

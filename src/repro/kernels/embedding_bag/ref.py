@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for fixed-length embedding-bag (sum / mean).
+
+JAX has no native EmbeddingBag; the reference composes take + masked sum.
+``indices`` use ``vocab`` as the padding sentinel.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, indices, *, mode: str = "sum"):
+    """table: [V, D]; indices: [B, L] int32 (V = padding). Returns [B, D]."""
+    V = table.shape[0]
+    valid = indices < V
+    rows = jnp.take(table, indices, axis=0, mode="fill", fill_value=0.0)
+    rows = jnp.where(valid[..., None], rows, 0.0)
+    out = jnp.sum(rows, axis=1)
+    if mode == "mean":
+        cnt = jnp.maximum(jnp.sum(valid, axis=1, keepdims=True), 1)
+        out = out / cnt.astype(out.dtype)
+    return out

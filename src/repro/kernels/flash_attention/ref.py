@@ -1,0 +1,28 @@
+"""Pure-jnp oracle: softmax attention with GQA + optional causal mask."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None,
+                  q_offset: int = 0):
+    """q: [B, Hq, Sq, D]; k/v: [B, Hkv, Skv, D]. Hq % Hkv == 0.
+
+    ``q_offset``: absolute position of q[0] (decode: Skv - Sq)."""
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    if causal:
+        qi = jnp.arange(Sq)[:, None] + q_offset
+        kj = jnp.arange(k.shape[2])[None, :]
+        s = jnp.where(qi >= kj, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.relax.ops import relax_pallas, relax_jnp, build_dst_tiled_layout
+from repro.kernels.relax.ref import relax_ref

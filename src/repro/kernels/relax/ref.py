@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for min-plus edge relaxation.
+
+new_dist[v] = min(dist[v], min_{(u,v,w) in E} dist[u] + w)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def relax_ref(dist, src, dst, w):
+    """dist: [n] f32; src/dst: [e] int32 (n = OOB sentinel); w: [e] f32."""
+    d_src = jnp.take(dist, src, mode="fill", fill_value=float("inf"))
+    cand = d_src + w
+    return dist.at[dst].min(cand, mode="drop")

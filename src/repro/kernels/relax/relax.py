@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: blocked min-plus edge relaxation (SP-Async hot loop).
+
+TPU adaptation (vs. the CUDA-style atomicMin scatter a GPU port would use):
+scatter has no efficient TPU lowering, so edges are *pre-tiled by
+destination* (host-side, one-time — the layout is as static as the CSR
+itself) and each grid step produces one VB-wide vertex tile with a one-hot
+masked min-reduce, which is pure VPU work over an [EB, VB] tile held in
+VMEM. The source-distance gather is a 1-D dynamic gather from the
+VMEM-resident distance vector (Mosaic ``DynamicGatherOp``; validated here
+in interpret mode since the container is CPU-only).
+
+Grid: ``(n_vtiles, n_chunks)`` — the chunk axis streams over a tile's edge
+list in EB-sized pieces, revisiting the same output block (reduction
+pattern; initialized at chunk 0).
+
+VMEM working set per step:
+  dist (full block)            4 * block_pad
+  edge chunk (src, w, dstrel)  ~12 * EB
+  one-hot tile                 4 * EB * VB   (dominant; 512*128*4 = 256 KiB)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INF = jnp.float32(jnp.inf)
+
+
+def _relax_kernel(dist_ref, src_ref, w_ref, dstrel_ref, out_ref, *, vb: int):
+    i = pl.program_id(0)   # vertex tile
+    j = pl.program_id(1)   # edge chunk within the tile
+
+    # initialize the output tile from the current distances on first visit
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = dist_ref[pl.dslice(i * vb, vb)]
+
+    src = src_ref[0, 0, :]                 # [EB] int32 (sentinel = block_pad-1)
+    w = w_ref[0, 0, :]                     # [EB] f32 (+inf padding)
+    dstrel = dstrel_ref[0, 0, :]           # [EB] int32 in [0, vb)
+
+    d_src = jnp.take(dist_ref[...], src)   # 1-D dynamic gather from VMEM
+    cand = d_src + w                       # [EB]
+
+    eb = cand.shape[0]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (eb, vb), 1)
+    onehot = dstrel[:, None] == lane       # [EB, VB]
+    mins = jnp.min(jnp.where(onehot, cand[:, None], jnp.float32(float("inf"))), axis=0)
+    out_ref[...] = jnp.minimum(out_ref[...], mins)
+
+
+def relax_dst_tiled(dist_pad, src_t, w_t, dstrel_t, *, vb: int, eb: int,
+                    interpret: bool = True):
+    """dist_pad: [block_pad] f32 (block_pad % vb == 0).
+    src_t/w_t/dstrel_t: [n_vtiles, n_chunks, EB] dst-tiled edge layout.
+    Returns new distances [block_pad]."""
+    n_vtiles, n_chunks, eb_l = src_t.shape
+    assert eb_l == eb and dist_pad.shape[0] == n_vtiles * vb
+
+    grid = (n_vtiles, n_chunks)
+    kernel = functools.partial(_relax_kernel, vb=vb)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(dist_pad.shape, lambda i, j: (0,)),          # full dist
+            pl.BlockSpec((1, 1, eb), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, eb), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, eb), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((vb,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_vtiles * vb,), dist_pad.dtype),
+        interpret=interpret,
+    )(dist_pad, src_t, w_t, dstrel_t)

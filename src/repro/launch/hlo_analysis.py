@@ -1,0 +1,122 @@
+"""Parse collective traffic and roofline terms out of compiled artifacts.
+
+``cost_analysis`` gives FLOPs and HBM bytes; collective bytes are NOT in it,
+so we parse the (post-SPMD-partitioning) HLO text and sum result-shape bytes
+of every collective op, converting to per-device wire bytes with the
+standard algorithm models:
+
+  all-reduce        2 * bytes * (P-1)/P      (ring RS + AG)
+  all-gather        bytes * (P-1)/P          (result bytes include the P×)
+  reduce-scatter    bytes * (P-1)/P          (input bytes)
+  all-to-all        bytes * (P-1)/P
+  collective-permute bytes                   (one hop)
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (per-device injection proxy)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _while_body_regions(hlo_text: str) -> set:
+    """Names of computations used as while-loop bodies (scan lowers to
+    while; collectives inside run once per trip, so their bytes must be
+    scaled by the trip count)."""
+    bodies = set()
+    for m in re.finditer(r"while\(.*?\).*?body=%?([\w.\-]+)", hlo_text):
+        bodies.add(m.group(1))
+    return bodies
+
+
+def collective_bytes(hlo_text: str, n_devices: int,
+                     loop_scale: int = 1) -> dict:
+    """Sum per-collective wire bytes (per device) from HLO module text.
+    ``loop_scale``: multiplier applied to collectives inside while-loop
+    bodies (= scan trip count, e.g. n_layers for scan-over-layers)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    frac = (n_devices - 1) / max(n_devices, 1)
+    bodies = _while_body_regions(hlo_text) if loop_scale != 1 else set()
+    current_comp = None
+    in_body = False
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        mc = re.match(r"%?([\w.\-]+) \([\w.\-]*:? ?.*\) -> .+ \{$", ls)
+        if mc:
+            current_comp = mc.group(1)
+            in_body = current_comp in bodies
+            continue
+        m = re.match(r"%?[\w.\-]+ = (.+?) (all-reduce|all-gather|"
+                     r"reduce-scatter|all-to-all|collective-permute)", ls)
+        if not m:
+            continue
+        shp, op = m.group(1), m.group(2)
+        b = _shape_bytes(shp)
+        # XLA's AllReducePromotion pass upcasts bf16 all-reduces to f32 on
+        # the CPU backend (reducer named ..._promoted). TPU reduces bf16 on
+        # the wire with f32 accumulation — count the pre-promotion payload.
+        if op == "all-reduce" and "_promoted" in ls:
+            b //= 2
+        if op == "all-reduce":
+            wire = 2 * b * frac
+        elif op == "collective-permute":
+            wire = b
+        else:
+            wire = b * frac
+        scale = loop_scale if in_body else 1
+        out[op] += int(wire * scale)
+        counts[op] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   n_devices: int, model_flops: float = 0.0) -> dict:
+    """``flops``/``hbm_bytes`` come from the PARTITIONED executable's
+    cost_analysis and are PER-DEVICE (verified against 6·N·D for multiple
+    cells); collective bytes (parsed from the partitioned HLO) are
+    per-device wire traffic. ``model_flops`` is the GLOBAL useful work."""
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm_bytes / HBM_BW
+    coll_s = coll_bytes / ICI_BW
+    dominant = max((compute_s, "compute"), (memory_s, "memory"),
+                   (coll_s, "collective"))[1]
+    hlo_global = flops * n_devices
+    return dict(
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        dominant=dominant,
+        model_flops=model_flops,
+        useful_ratio=(model_flops / hlo_global) if hlo_global else 0.0,
+        bound_s=max(compute_s, memory_s, coll_s),
+        roofline_fraction=(compute_s / max(compute_s, memory_s, coll_s)
+                           if max(compute_s, memory_s, coll_s) > 0 else 0.0),
+    )

@@ -1,0 +1,141 @@
+"""AutoInt [arXiv:1810.11921]: self-attention feature interaction over
+sparse-field embeddings, with EmbeddingBag lookup (take + segment/masked
+sum — JAX has no native EmbeddingBag; see kernels/embedding_bag for the
+Pallas variant of the same op).
+
+The embedding table is the system's memory hot spot: one combined table
+[n_fields * vocab_per_field, d] row-sharded over the model axis. Lookups
+are batch-sharded; GSPMD routes the gather.
+
+Steps: train (BCE), serve (sigmoid scores), retrieval (query embedding vs
+10^6 candidate vectors — one batched matmul + top-k, never a loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import MeshAxes
+from repro.models.params import ParamDef
+from repro.models.gnn import mlp_defs, mlp_apply
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoIntConfig:
+    name: str = "autoint"
+    n_sparse: int = 39
+    vocab_per_field: int = 1_000_000
+    embed_dim: int = 16
+    n_attn_layers: int = 3
+    n_heads: int = 2
+    d_attn: int = 32
+    multi_hot: int = 1           # bag length per field (1 = one-hot)
+    d_retrieval: int = 64
+
+    @property
+    def total_vocab(self):
+        return self.n_sparse * self.vocab_per_field
+
+
+def autoint_param_defs(cfg: AutoIntConfig, ax: MeshAxes):
+    D, A, H = cfg.embed_dim, cfg.d_attn, cfg.n_heads
+    layers = []
+    d_in = D
+    for _ in range(cfg.n_attn_layers):
+        layers.append(dict(
+            wq=ParamDef((d_in, H * A), P(None, None)),
+            wk=ParamDef((d_in, H * A), P(None, None)),
+            wv=ParamDef((d_in, H * A), P(None, None)),
+            wres=ParamDef((d_in, H * A), P(None, None)),
+        ))
+        d_in = H * A
+    return dict(
+        table=ParamDef((cfg.total_vocab, D), P(ax.model, None),
+                       init="embed", scale=0.01),
+        layers=layers,
+        head=mlp_defs([cfg.n_sparse * d_in, 64, 1]),
+        retr_proj=mlp_defs([cfg.n_sparse * d_in, cfg.d_retrieval]),
+    )
+
+
+def _embed_fields(params, idx, cfg: AutoIntConfig):
+    """idx: [B, F, L] global row ids (sentinel total_vocab = padding).
+    EmbeddingBag (sum) per field -> [B, F, D]."""
+    V = cfg.total_vocab
+    valid = idx < V
+    rows = jnp.take(params["table"], jnp.minimum(idx, V - 1), axis=0)
+    rows = jnp.where(valid[..., None], rows, 0.0)
+    return jnp.sum(rows, axis=2)
+
+
+def autoint_embed(params, batch, cfg: AutoIntConfig, ax: MeshAxes,
+                  batch_axes=None):
+    """batch_axes: mesh axes to shard B over (None = replicated, for the
+    B=1 retrieval query)."""
+    bspec = P(batch_axes, None, None)
+    x = _embed_fields(params, batch["sparse_idx"], cfg)      # [B, F, D]
+    x = lax.with_sharding_constraint(x, bspec)
+    B, F, _ = x.shape
+    H, A = cfg.n_heads, cfg.d_attn
+    for lp in params["layers"]:
+        q = (x @ lp["wq"]).reshape(B, F, H, A)
+        k = (x @ lp["wk"]).reshape(B, F, H, A)
+        v = (x @ lp["wv"]).reshape(B, F, H, A)
+        s = jnp.einsum("bfha,bgha->bhfg", q, k) / (A ** 0.5)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhfg,bgha->bfha", p, v).reshape(B, F, H * A)
+        x = jax.nn.relu(o + x @ lp["wres"])
+        x = lax.with_sharding_constraint(x, bspec)
+    return x.reshape(B, -1)
+
+
+def autoint_logit(params, batch, cfg, ax):
+    flat = autoint_embed(params, batch, cfg, ax, batch_axes=ax.data)
+    return mlp_apply(params["head"], flat, 2)[:, 0]
+
+
+def autoint_loss(params, batch, cfg, ax):
+    logit = autoint_logit(params, batch, cfg, ax)
+    y = batch["labels"].astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logit, 0) - logit * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+
+def make_autoint_train_step(cfg: AutoIntConfig, ax: MeshAxes, opt_cfg):
+    from repro.optim import adamw_update
+    from functools import partial
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            partial(autoint_loss, cfg=cfg, ax=ax))(params, batch)
+        params, opt_state, gnorm = adamw_update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_autoint_serve_step(cfg: AutoIntConfig, ax: MeshAxes):
+    def serve_step(params, batch):
+        return jax.nn.sigmoid(autoint_logit(params, batch, cfg, ax))
+    return serve_step
+
+
+def make_retrieval_step(cfg: AutoIntConfig, ax: MeshAxes, top_k: int = 100):
+    """Score one query batch against [n_cand, d_retrieval] item vectors."""
+
+    def retrieval_step(params, batch):
+        q = mlp_apply(params["retr_proj"],
+                      autoint_embed(params, batch, cfg, ax,
+                                    batch_axes=None), 1)          # [B, dR]
+        cand = batch["cand_vecs"]                                 # [Nc, dR]
+        scores = q @ cand.T                                       # [B, Nc]
+        # query batch may be 1 — keep it replicated; shard the candidate axis
+        scores = lax.with_sharding_constraint(scores, P(None, ax.model))
+        vals, idx = lax.top_k(scores, top_k)
+        return vals, idx
+
+    return retrieval_step

@@ -1,0 +1,395 @@
+"""GNN zoo: GAT, EGNN, MACE, GraphCast-style encoder-processor-decoder.
+
+Message passing is built on the repo's segment-op substrate (JAX has no
+sparse SpMM beyond BCOO): padded edge lists ``(src, dst)`` with sentinel
+``N`` for padding, gathers by src, ``jax.ops.segment_sum/max`` scatters by
+dst (sentinel rows are dropped by scatter mode="drop" semantics). This is
+the same gather→reduce→scatter kernel family as the SSSP relaxation — the
+two share the dst-tiled Pallas layout at the kernel level.
+
+Batch dict convention (uniform across archs; configs build the specs):
+  node_feat [N, Df] f32      edge_src/edge_dst [E] i32 (N = pad sentinel)
+  coords    [N, 3]  f32      (egnn / mace)
+  edge_feat [E, De] f32      (graphcast)
+  graph_id  [N] i32          (batched small graphs; 0 for full-graph)
+  labels    arch-dependent
+
+Sharding: node/edge arrays are 1-D sharded over ALL mesh axes (the GNN
+analog of the SSSP 1-D block partition); net params are small and
+replicated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import MeshAxes
+from repro.models.params import ParamDef
+from repro.models import equivariant as eqv
+
+
+# --------------------------------------------------------------------------
+# segment-op substrate
+# --------------------------------------------------------------------------
+
+def seg_sum(data, seg, n):
+    return jax.ops.segment_sum(data, seg, num_segments=n)
+
+
+def seg_max(data, seg, n):
+    return jax.ops.segment_max(data, seg, num_segments=n)
+
+
+def seg_mean(data, seg, n):
+    s = seg_sum(data, seg, n)
+    cnt = seg_sum(jnp.ones((data.shape[0],) + (1,) * (data.ndim - 1),
+                           data.dtype), seg, n)
+    return s / jnp.maximum(cnt, 1.0)
+
+
+def seg_softmax(scores, seg, n):
+    """Numerically-stable softmax over edges grouped by destination."""
+    mx = seg_max(scores, seg, n)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    ex = jnp.exp(scores - jnp.take(mx, seg, axis=0, mode="fill", fill_value=0.0))
+    den = seg_sum(ex, seg, n)
+    return ex / jnp.take(jnp.maximum(den, 1e-9), seg, axis=0, mode="fill",
+                         fill_value=1.0)
+
+
+def gather_nodes(h, idx):
+    return jnp.take(h, idx, axis=0, mode="fill", fill_value=0.0)
+
+
+# --------------------------------------------------------------------------
+# tiny MLP helper (ParamDef-declared)
+# --------------------------------------------------------------------------
+
+def mlp_defs(dims, *, ln: bool = False):
+    d = {}
+    for i in range(len(dims) - 1):
+        d[f"w{i}"] = ParamDef((dims[i], dims[i + 1]), P(None, None))
+        d[f"b{i}"] = ParamDef((dims[i + 1],), P(None), init="zeros")
+    if ln:
+        d["ln"] = ParamDef((dims[-1],), P(None), init="ones")
+    return d
+
+
+def mlp_apply(p, x, n_layers, act=jax.nn.silu):
+    for i in range(n_layers):
+        x = x @ p[f"w{i}"] + p[f"b{i}"]
+        if i < n_layers - 1:
+            x = act(x)
+    if "ln" in p:
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        x = (x - mu) * lax.rsqrt(var + 1e-5) * p["ln"]
+    return x
+
+
+# ==========================================================================
+# GAT  [arXiv:1710.10903]
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class GatConfig:
+    name: str = "gat-cora"
+    n_layers: int = 2
+    d_hidden: int = 8
+    n_heads: int = 8
+    d_in: int = 1433
+    n_classes: int = 7
+    leaky_slope: float = 0.2
+
+
+def gat_param_defs(cfg: GatConfig, ax: MeshAxes):
+    layers = []
+    d_in = cfg.d_in
+    for i in range(cfg.n_layers):
+        last = i == cfg.n_layers - 1
+        heads = 1 if last else cfg.n_heads
+        d_out = cfg.n_classes if last else cfg.d_hidden
+        layers.append(dict(
+            w=ParamDef((d_in, heads * d_out), P(None, None)),
+            a_src=ParamDef((heads, d_out), P(None, None)),
+            a_dst=ParamDef((heads, d_out), P(None, None)),
+        ))
+        d_in = heads * d_out
+    return dict(layers=layers)
+
+
+def gat_forward(params, batch, cfg: GatConfig, ax: MeshAxes):
+    h = batch["node_feat"]
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    N = h.shape[0]
+    for i, lp in enumerate(params["layers"]):
+        last = i == cfg.n_layers - 1
+        heads = 1 if last else cfg.n_heads
+        d_out = cfg.n_classes if last else cfg.d_hidden
+        wh = (h @ lp["w"]).reshape(N, heads, d_out)
+        s_src = jnp.einsum("nhd,hd->nh", wh, lp["a_src"])
+        s_dst = jnp.einsum("nhd,hd->nh", wh, lp["a_dst"])
+        e = gather_nodes(s_src, src) + gather_nodes(s_dst, dst)   # [E, H]
+        e = jax.nn.leaky_relu(e, cfg.leaky_slope)
+        pad = src >= N
+        e = jnp.where(pad[:, None], -jnp.inf, e)
+        alpha = seg_softmax(e, jnp.where(pad, N, dst), N)         # [E, H]
+        msg = alpha[..., None] * gather_nodes(wh, src)            # [E, H, D]
+        h = seg_sum(msg, jnp.where(pad, N, dst), N)               # pad -> drop? sentinel==N ok with num_segments=N
+        h = h.reshape(N, heads * d_out)
+        if not last:
+            h = jax.nn.elu(h)
+        h = lax.with_sharding_constraint(h, P(ax.all, None))
+    return h  # [N, n_classes]
+
+
+def gat_loss(params, batch, cfg, ax):
+    logits = gat_forward(params, batch, cfg, ax)
+    labels = batch["labels"]
+    mask = labels >= 0
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[:, None], axis=-1)[:, 0]
+    return jnp.sum(jnp.where(mask, logz - ll, 0.0)) / jnp.maximum(mask.sum(), 1)
+
+
+# ==========================================================================
+# EGNN  [arXiv:2102.09844]
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class EgnnConfig:
+    name: str = "egnn"
+    n_layers: int = 4
+    d_hidden: int = 64
+    d_in: int = 16
+
+
+def egnn_param_defs(cfg: EgnnConfig, ax: MeshAxes):
+    D = cfg.d_hidden
+    layers = [dict(
+        phi_e=mlp_defs([2 * D + 1, D, D]),
+        phi_x=mlp_defs([D, D, 1]),
+        phi_h=mlp_defs([2 * D, D, D]),
+    ) for _ in range(cfg.n_layers)]
+    return dict(embed=mlp_defs([cfg.d_in, D]), layers=layers,
+                readout=mlp_defs([D, D, 1]))
+
+
+def egnn_forward(params, batch, cfg: EgnnConfig, ax: MeshAxes):
+    h = mlp_apply(params["embed"], batch["node_feat"], 1)
+    x = batch["coords"]
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    N = h.shape[0]
+    pad = src >= N
+    seg = jnp.where(pad, N, dst)
+    for lp in params["layers"]:
+        xs, xd = gather_nodes(x, src), gather_nodes(x, dst)
+        d2 = jnp.sum((xd - xs) ** 2, axis=-1, keepdims=True)
+        m = mlp_apply(lp["phi_e"],
+                      jnp.concatenate([gather_nodes(h, dst),
+                                       gather_nodes(h, src), d2], -1), 2)
+        m = jnp.where(pad[:, None], 0.0, m)
+        w = mlp_apply(lp["phi_x"], m, 2)                      # [E, 1]
+        x = x + seg_mean((xd - xs) * w, seg, N)
+        agg = seg_sum(m, seg, N)
+        h = h + mlp_apply(lp["phi_h"], jnp.concatenate([h, agg], -1), 2)
+        h = lax.with_sharding_constraint(h, P(ax.all, None))
+    return h, x
+
+
+def egnn_loss(params, batch, cfg, ax):
+    h, x = egnn_forward(params, batch, cfg, ax)
+    pred = mlp_apply(params["readout"], h, 2)[:, 0]
+    return jnp.mean((pred - batch["labels"]) ** 2)
+
+
+# ==========================================================================
+# MACE  [arXiv:2206.07697] — l<=2 irreps, correlation order 3
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class MaceConfig:
+    name: str = "mace"
+    n_layers: int = 2
+    d_hidden: int = 128
+    l_max: int = 2
+    correlation: int = 3
+    n_rbf: int = 8
+    r_cut: float = 5.0
+    n_species: int = 10
+
+    @property
+    def ls(self):
+        return tuple(range(self.l_max + 1))
+
+
+def _tp_paths(l_max):
+    """Allowed (l1, l2, l3) couplings with all l <= l_max."""
+    out = []
+    for l1 in range(l_max + 1):
+        for l2 in range(l_max + 1):
+            for l3 in range(abs(l1 - l2), min(l1 + l2, l_max) + 1):
+                out.append((l1, l2, l3))
+    return out
+
+
+def mace_param_defs(cfg: MaceConfig, ax: MeshAxes):
+    C = cfg.d_hidden
+    paths = _tp_paths(cfg.l_max)
+    layers = []
+    for _ in range(cfg.n_layers):
+        lp = dict(
+            radial=mlp_defs([cfg.n_rbf, C, len(paths) * C]),
+            # per-l channel mixing after aggregation (A-basis linear)
+            mix_a={str(l): ParamDef((C, C), P(None, None)) for l in cfg.ls},
+            # product-basis mixing (correlation 2 and 3 contributions)
+            mix_b2={str(l): ParamDef((C, C), P(None, None)) for l in cfg.ls},
+            mix_b3={str(l): ParamDef((C, C), P(None, None)) for l in cfg.ls},
+            update={str(l): ParamDef((C, C), P(None, None)) for l in cfg.ls},
+            resid={str(l): ParamDef((C, C), P(None, None)) for l in cfg.ls},
+        )
+        layers.append(lp)
+    return dict(
+        embed=ParamDef((cfg.n_species, C), P(None, None), init="embed", scale=1.0),
+        layers=layers,
+        readout=mlp_defs([C, C, 1]),
+    )
+
+
+def _tensor_product(a, b, l1, l2, l3):
+    """Channel-wise CG product: a [N,C,2l1+1] x b [N,C|1,2l2+1] -> [N,C,2l3+1]."""
+    cg = jnp.asarray(eqv.real_cg(l1, l2, l3))
+    if b.ndim == 2:  # SH without channel dim
+        return jnp.einsum("ncx,ny,xyz->ncz", a, b, cg)
+    return jnp.einsum("ncx,ncy,xyz->ncz", a, b, cg)
+
+
+def mace_forward(params, batch, cfg: MaceConfig, ax: MeshAxes):
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    x = batch["coords"]
+    N = x.shape[0]
+    C = cfg.d_hidden
+    pad = src >= N
+    seg = jnp.where(pad, N, dst)
+    species = batch["node_feat"][:, 0].astype(jnp.int32)
+
+    h = {l: jnp.zeros((N, C, 2 * l + 1), jnp.float32) for l in cfg.ls}
+    h[0] = jnp.take(params["embed"], species, axis=0, mode="clip")[..., None]
+
+    vec = gather_nodes(x, dst) - gather_nodes(x, src)
+    r = jnp.sqrt(jnp.sum(vec * vec, -1) + 1e-9)
+    sh = eqv.spherical_harmonics(vec)                     # {l2: [E, 2l2+1]}
+    rbf = eqv.bessel_rbf(r, cfg.n_rbf, cfg.r_cut)         # [E, n_rbf]
+    paths = _tp_paths(cfg.l_max)
+
+    for lp in params["layers"]:
+        Rw = mlp_apply(lp["radial"], rbf, 2).reshape(-1, len(paths), C)
+        Rw = jnp.where(pad[:, None, None], 0.0, Rw)
+        # ---- A-basis: aggregate R * (h_src^l1 x Y^l2 -> l3) per path ------
+        A = {l: jnp.zeros((N, C, 2 * l + 1), jnp.float32) for l in cfg.ls}
+        for pi, (l1, l2, l3) in enumerate(paths):
+            hj = gather_nodes(h[l1], src)                 # [E, C, 2l1+1]
+            tp = _tensor_product(hj, sh[l2], l1, l2, l3)  # [E, C, 2l3+1]
+            A[l3] = A[l3] + seg_sum(tp * Rw[:, pi, :, None], seg, N)
+        A = {l: jnp.einsum("ncm,cd->ndm", A[l], lp["mix_a"][str(l)])
+             for l in cfg.ls}
+        # ---- B-basis: symmetric products up to correlation 3 --------------
+        B = {l: A[l] for l in cfg.ls}
+        A2 = {l: jnp.zeros_like(A[l]) for l in cfg.ls}
+        for (l1, l2, l3) in paths:
+            A2[l3] = A2[l3] + _tensor_product(A[l1], A[l2], l1, l2, l3)
+        for l in cfg.ls:
+            B[l] = B[l] + jnp.einsum("ncm,cd->ndm", A2[l], lp["mix_b2"][str(l)])
+        A3 = {l: jnp.zeros_like(A[l]) for l in cfg.ls}
+        for (l1, l2, l3) in paths:
+            A3[l3] = A3[l3] + _tensor_product(A2[l1], A[l2], l1, l2, l3)
+        for l in cfg.ls:
+            B[l] = B[l] + jnp.einsum("ncm,cd->ndm", A3[l], lp["mix_b3"][str(l)])
+        # ---- update + residual -------------------------------------------
+        h = {l: jnp.einsum("ncm,cd->ndm", B[l], lp["update"][str(l)])
+             + jnp.einsum("ncm,cd->ndm", h[l], lp["resid"][str(l)])
+             for l in cfg.ls}
+        h = {l: lax.with_sharding_constraint(v, P(ax.all, None, None))
+             for l, v in h.items()}
+    return h
+
+
+def mace_loss(params, batch, cfg: MaceConfig, ax):
+    h = mace_forward(params, batch, cfg, ax)
+    site_e = mlp_apply(params["readout"], h[0][..., 0], 2)[:, 0]   # [N]
+    G = batch["graph_energy"].shape[0]
+    energy = jax.ops.segment_sum(site_e, batch["graph_id"], num_segments=G)
+    return jnp.mean((energy - batch["graph_energy"]) ** 2)
+
+
+# ==========================================================================
+# GraphCast-style encoder-processor-decoder  [arXiv:2212.12794]
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class GraphcastConfig:
+    name: str = "graphcast"
+    n_layers: int = 16
+    d_hidden: int = 512
+    n_vars: int = 227
+    mesh_refinement: int = 6
+    d_edge_in: int = 4
+
+
+def graphcast_param_defs(cfg: GraphcastConfig, ax: MeshAxes):
+    D = cfg.d_hidden
+    layers = [dict(
+        edge_mlp=mlp_defs([3 * D, D, D], ln=True),
+        node_mlp=mlp_defs([2 * D, D, D], ln=True),
+    ) for _ in range(cfg.n_layers)]
+    return dict(
+        node_enc=mlp_defs([cfg.n_vars, D, D], ln=True),
+        edge_enc=mlp_defs([cfg.d_edge_in, D, D], ln=True),
+        layers=layers,
+        node_dec=mlp_defs([D, D, cfg.n_vars]),
+    )
+
+
+def graphcast_forward(params, batch, cfg: GraphcastConfig, ax: MeshAxes):
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    N = batch["node_feat"].shape[0]
+    pad = src >= N
+    seg = jnp.where(pad, N, dst)
+    h = mlp_apply(params["node_enc"], batch["node_feat"], 2)
+    e = mlp_apply(params["edge_enc"], batch["edge_feat"], 2)
+    for lp in params["layers"]:
+        cat = jnp.concatenate(
+            [e, gather_nodes(h, src), gather_nodes(h, dst)], axis=-1)
+        e = e + mlp_apply(lp["edge_mlp"], cat, 2)
+        e = jnp.where(pad[:, None], 0.0, e)
+        agg = seg_sum(e, seg, N)
+        h = h + mlp_apply(lp["node_mlp"], jnp.concatenate([h, agg], -1), 2)
+        h = lax.with_sharding_constraint(h, P(ax.all, None))
+    return mlp_apply(params["node_dec"], h, 2)
+
+
+def graphcast_loss(params, batch, cfg, ax):
+    out = graphcast_forward(params, batch, cfg, ax)
+    return jnp.mean((out - batch["labels"]) ** 2)
+
+
+# --------------------------------------------------------------------------
+# generic train step
+# --------------------------------------------------------------------------
+
+def make_gnn_train_step(loss_f, cfg, ax: MeshAxes, opt_cfg):
+    from repro.optim import adamw_update
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(partial(loss_f, cfg=cfg, ax=ax))(
+            params, batch)
+        params, opt_state, gnorm = adamw_update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step

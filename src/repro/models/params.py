@@ -1,0 +1,62 @@
+"""Declarative parameter trees.
+
+A model declares its parameters once as a pytree of ``ParamDef``; the same
+declaration then yields (a) materialized arrays for training/smoke tests,
+(b) ``ShapeDtypeStruct`` stand-ins for the no-allocation dry-run, and
+(c) a ``PartitionSpec`` tree for pjit in/out shardings. Keeping all three
+views in lock-step is what makes 40 dry-run cells tractable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    pspec: P
+    init: str = "normal"       # normal | zeros | ones | embed
+    scale: float | None = None  # None -> 1/sqrt(fan_in)
+    dtype: jnp.dtype | None = None  # None -> model default
+
+
+def _is_def(x):
+    return isinstance(x, ParamDef)
+
+
+def materialize(defs, key, default_dtype=jnp.float32):
+    leaves, treedef = jax.tree_util.tree_flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for d, k in zip(leaves, keys):
+        dt = d.dtype or default_dtype
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dt))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dt))
+        else:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            scale = d.scale if d.scale is not None else fan_in ** -0.5
+            out.append((jax.random.normal(k, d.shape, jnp.float32) * scale).astype(dt))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract(defs, default_dtype=jnp.float32):
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype or default_dtype),
+        defs, is_leaf=_is_def)
+
+
+def specs(defs):
+    return jax.tree_util.tree_map(lambda d: d.pspec, defs, is_leaf=_is_def)
+
+
+def n_params(defs) -> int:
+    import math
+    return sum(math.prod(d.shape) for d in
+               jax.tree_util.tree_leaves(defs, is_leaf=_is_def))

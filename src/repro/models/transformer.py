@@ -1,0 +1,504 @@
+"""Decoder-only transformer LM family (dense + MoE), GSPMD-sharded.
+
+One implementation covers the five assigned LM archs via config:
+GQA/MQA/MHA, RoPE, RMSNorm, optional per-head QK-norm (Qwen3), GeGLU/SwiGLU,
+explicit head_dim (Gemma's 256), embedding scaling (Gemma), and a top-k
+routed MoE FFN (OLMoE / Qwen3-MoE) with sort-based dispatch (no [T,E,C]
+one-hot tensor).
+
+Sharding (MaxText-style fsdp+tensor):
+  params  [..., fsdp, tp]  — weights sharded over BOTH data(+pod) and model
+  acts    [batch→data, seq, d_model]
+  kv cache [L, B→data, Hkv, S→model, Dh] — decode shards the *sequence* over
+  the model axis (uniform across archs; works when Hkv < model parallelism,
+  the Qwen3/Mistral case; attention contractions over S psum automatically).
+
+Attention impls: "xla" (materialized scores), "chunked" (lax.scan online
+softmax — flash-style memory behaviour, lowerable on any backend; the
+dry-run default), "pallas" (the real kernel, TPU runtime only).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import MeshAxes
+from repro.models.params import ParamDef
+from repro.models import moe as moe_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int
+    capacity_factor: float = 1.25
+    aux_weight: float = 0.01
+    norm_topk: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int | None = None          # None -> d_model // n_heads
+    activation: str = "silu"             # silu (SwiGLU) | gelu (GeGLU)
+    moe: MoeConfig | None = None
+    moe_impl: str = "shmap"              # shmap (manual EP combine; 2.3x
+                                         # less wire than gspmd) | gspmd
+    qk_norm: bool = False                # Qwen3
+    embed_scale: bool = False            # Gemma: x *= sqrt(d_model)
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    scan_layers: bool = True             # False: unroll (dry-run uses this —
+                                         # XLA cost_analysis counts scan
+                                         # bodies once, breaking FLOP totals)
+    attn_impl: str = "chunked"           # xla | chunked | pallas
+    attn_chunk: int = 1024
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def n_params(self) -> int:
+        from repro.models.params import n_params
+        return n_params(param_defs(self, MeshAxes(data=("data",))))
+
+    def n_active_params(self) -> int:
+        """Params touched per token (MoE counts top_k experts only)."""
+        total = self.n_params()
+        if self.moe is None:
+            return total
+        e, k = self.moe.n_experts, self.moe.top_k
+        expert = 3 * self.d_model * self.moe.d_expert * self.n_layers
+        return total - expert * e + expert * k
+
+
+# --------------------------------------------------------------------------
+# parameter declaration
+# --------------------------------------------------------------------------
+
+def param_defs(cfg: TransformerConfig, ax: MeshAxes):
+    D, H, Hkv, Dh, F, V, L = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                              cfg.hd, cfg.d_ff, cfg.vocab_size, cfg.n_layers)
+    fsdp, tp = ax.data, ax.model
+
+    def ld(shape, pspec, **kw):  # layer-stacked param (leading L dim for scan)
+        return ParamDef((L, *shape), P(None, *pspec), **kw)
+
+    layer = dict(
+        attn_norm=ld((D,), (None,), init="ones"),
+        wq=ld((D, H * Dh), (fsdp, tp)),
+        wk=ld((D, Hkv * Dh), (fsdp, tp)),
+        wv=ld((D, Hkv * Dh), (fsdp, tp)),
+        wo=ld((H * Dh, D), (tp, fsdp)),
+        mlp_norm=ld((D,), (None,), init="ones"),
+    )
+    if cfg.qk_norm:
+        layer["q_norm"] = ld((Dh,), (None,), init="ones")
+        layer["k_norm"] = ld((Dh,), (None,), init="ones")
+    if cfg.moe is None:
+        layer.update(
+            w_gate=ld((D, F), (fsdp, tp)),
+            w_up=ld((D, F), (fsdp, tp)),
+            w_down=ld((F, D), (tp, fsdp)),
+        )
+    else:
+        E, Fe = cfg.moe.n_experts, cfg.moe.d_expert
+        layer.update(
+            w_router=ld((D, E), (fsdp, None)),
+            w_gate=ld((E, D, Fe), (tp, fsdp, None)),
+            w_up=ld((E, D, Fe), (tp, fsdp, None)),
+            w_down=ld((E, Fe, D), (tp, None, fsdp)),
+        )
+    return dict(
+        embed=ParamDef((V, D), P(tp, fsdp), init="embed", scale=1.0),
+        layers=layer,
+        final_norm=ParamDef((D,), P(None), init="ones"),
+        unembed=ParamDef((D, V), P(fsdp, tp)),
+    )
+
+
+# --------------------------------------------------------------------------
+# building blocks
+# --------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def dtype_fence(x, dtype):
+    """Identity forward; backward casts the cotangent to ``dtype``.
+    Placed on the residual stream at layer boundaries so the backward
+    partial-sum all-reduces move bf16, not the f32 the loss path leaks in
+    (measured 2x on the dominant collective term — EXPERIMENTS.md §Perf)."""
+    return x
+
+
+def _fence_fwd(x, dtype):
+    return x, None
+
+
+def _fence_bwd(dtype, _, ct):
+    return (ct.astype(dtype),)
+
+
+dtype_fence.defvjp(_fence_fwd, _fence_bwd)
+
+
+def _use(w, *spec):
+    """ZeRO-3-style FSDP weight gather at use-site.
+
+    Weights are STORED sharded over (fsdp=data, tp=model); matmuls must not
+    contract over a sharded dimension or GSPMD falls back to all-reducing
+    the full-width f32 activation over the data axis (measured: 3.2 GiB x
+    2-3/layer on mistral-large — 4.1 TB/step/device; see EXPERIMENTS.md
+    §Perf iter 1). Constraining the weight to its use-layout forces the
+    ~100x smaller per-layer weight all-gather instead."""
+    return lax.with_sharding_constraint(w, P(*spec))
+
+
+def rmsnorm(x, g, eps):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * g.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x, positions, theta):
+    """x: [B, S, H, Dh]; positions: [B, S] int32."""
+    Dh = x.shape[-1]
+    half = Dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq      # [B, S, half]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _attn_xla(q, k, v, *, causal, q_offset, scale):
+    """q: [B, S, H, Dh]; k/v: [B, Skv, Hkv, Dh] (materialized scores)."""
+    B, S, H, Dh = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    qh = q.reshape(B, S, Hkv, g, Dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qh.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        qi = jnp.arange(S)[:, None] + q_offset
+        kj = jnp.arange(k.shape[1])[None, :]
+        s = jnp.where(qi >= kj, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, Dh).astype(q.dtype)
+
+
+def _chunk_kv(x, chunk):
+    B, Skv, Hkv, Dh = x.shape
+    nc = -(-Skv // chunk)
+    xp = jnp.pad(x, ((0, 0), (0, nc * chunk - Skv), (0, 0), (0, 0)))
+    return xp.reshape(B, nc, chunk, Hkv, Dh).transpose(1, 0, 2, 3, 4), nc
+
+
+def _attn_fwd_scan(q, k, v, causal, q_offset, scale, chunk):
+    B, S, H, Dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    kc, nc = _chunk_kv(k, chunk)
+    vc, _ = _chunk_kv(v, chunk)
+    qh = q.reshape(B, S, Hkv, g, Dh).astype(jnp.float32)
+    qi = jnp.arange(S)[:, None] + q_offset
+
+    def step(carry, xs):
+        acc, m, l = carry
+        kb, vb, j = xs
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qh, kb.astype(jnp.float32)) * scale
+        kj = j * chunk + jnp.arange(chunk)[None, :]
+        valid = kj < Skv
+        if causal:
+            valid = valid & (qi >= kj)
+        s = jnp.where(valid[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - jnp.where(jnp.isfinite(m_new), m_new, 0.0)[..., None])
+        p = jnp.where(valid[None, None, None], p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_new), 0.0)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhgqk,bkhd->bhgqd", p,
+                                                  vb.astype(jnp.float32))
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((B, Hkv, g, S, Dh), jnp.float32)
+    m0 = jnp.full((B, Hkv, g, S), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, g, S), jnp.float32)
+    (acc, m, l), _ = lax.scan(step, (acc0, m0, l0), (kc, vc, jnp.arange(nc)))
+    l_safe = jnp.where(l > 0, l, 1.0)
+    out = acc / l_safe[..., None]                       # [B, Hkv, g, S, Dh]
+    lse = jnp.where(jnp.isfinite(m), m + jnp.log(l_safe), -jnp.inf)
+    return out, lse
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _attn_chunked(q, k, v, causal, q_offset, scale, chunk):
+    """Flash-style attention in pure XLA with a FLASH BACKWARD (custom_vjp):
+    the naive VJP of the online-softmax scan stores the f32 accumulator at
+    every chunk step (~GiB/layer at 4k; see EXPERIMENTS.md §Perf) — the
+    custom backward recomputes probabilities chunk-by-chunk from (out, lse)
+    instead, FlashAttention-2 style."""
+    out, _ = _attn_fwd_scan(q, k, v, causal, q_offset, scale, chunk)
+    B, S, H, Dh = q.shape
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, Dh).astype(q.dtype)
+
+
+def _attn_chunked_fwd(q, k, v, causal, q_offset, scale, chunk):
+    out, lse = _attn_fwd_scan(q, k, v, causal, q_offset, scale, chunk)
+    B, S, H, Dh = q.shape
+    o = out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, Dh).astype(q.dtype)
+    return o, (q, k, v, out.astype(q.dtype), lse)
+
+
+def _attn_chunked_bwd(causal, q_offset, scale, chunk, res, do):
+    q, k, v, out, lse = res
+    B, S, H, Dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    qh = q.reshape(B, S, Hkv, g, Dh).astype(jnp.float32)
+    doh = do.reshape(B, S, Hkv, g, Dh).transpose(0, 2, 3, 1, 4).astype(jnp.float32)
+    out32 = out.astype(jnp.float32)                     # [B, Hkv, g, S, Dh]
+    delta = jnp.sum(doh * out32, axis=-1)               # [B, Hkv, g, S]
+    kc, nc = _chunk_kv(k, chunk)
+    vc, _ = _chunk_kv(v, chunk)
+    qi = jnp.arange(S)[:, None] + q_offset
+    lse_safe = jnp.where(jnp.isfinite(lse), lse, 0.0)
+
+    def step(dq, xs):
+        kb, vb, j = xs
+        kb32, vb32 = kb.astype(jnp.float32), vb.astype(jnp.float32)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qh, kb32) * scale
+        kj = j * chunk + jnp.arange(chunk)[None, :]
+        valid = kj < Skv
+        if causal:
+            valid = valid & (qi >= kj)
+        p = jnp.where(valid[None, None, None],
+                      jnp.exp(s - lse_safe[..., None]), 0.0)
+        dv = jnp.einsum("bhgqk,bhgqd->bkhd", p, doh)
+        dp = jnp.einsum("bhgqd,bkhd->bhgqk", doh, vb32)
+        ds = p * (dp - delta[..., None]) * scale
+        dq = dq + jnp.einsum("bhgqk,bkhd->bqhgd", ds, kb32)
+        dk = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qh)
+        return dq, (dk, dv)
+
+    dq0 = jnp.zeros((B, S, Hkv, g, Dh), jnp.float32)
+    dq, (dkc, dvc) = lax.scan(step, dq0, (kc, vc, jnp.arange(nc)))
+    dk = dkc.transpose(1, 0, 2, 3, 4).reshape(B, nc * chunk, Hkv, Dh)[:, :Skv]
+    dv = dvc.transpose(1, 0, 2, 3, 4).reshape(B, nc * chunk, Hkv, Dh)[:, :Skv]
+    return (dq.reshape(B, S, H, Dh).astype(q.dtype), dk.astype(k.dtype),
+            dv.astype(v.dtype))
+
+
+_attn_chunked.defvjp(_attn_chunked_fwd, _attn_chunked_bwd)
+
+
+def attention(q, k, v, cfg: TransformerConfig, *, causal=True, q_offset=0):
+    scale = cfg.hd ** -0.5
+    if cfg.attn_impl == "pallas":
+        from repro.kernels.flash_attention import flash_attention
+        o = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3), causal=causal,
+                            q_offset=q_offset, interpret=False)
+        return o.transpose(0, 2, 1, 3)
+    if cfg.attn_impl == "chunked" and q.shape[1] > 1:
+        return _attn_chunked(q, k, v, causal, q_offset, scale, cfg.attn_chunk)
+    return _attn_xla(q, k, v, causal=causal, q_offset=q_offset, scale=scale)
+
+
+def _ffn_dense(x, lp, cfg, ax):
+    tp = ax.model
+    act = jax.nn.silu if cfg.activation == "silu" else partial(jax.nn.gelu, approximate=True)
+    h = act(x @ _use(lp["w_gate"], None, tp)) * (x @ _use(lp["w_up"], None, tp))
+    return h @ _use(lp["w_down"], tp, None)
+
+
+def _layer(x, lp, cfg: TransformerConfig, ax: MeshAxes, positions, cache=None,
+           cache_pos=None):
+    """One transformer block. x: [B, S, D]. Returns (x', new_cache_slice, aux)."""
+    B, S, D = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    tp = ax.model
+    h = rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+    q = (h @ _use(lp["wq"], None, tp)).reshape(B, S, H, Dh)
+    k = (h @ _use(lp["wk"], None, tp)).reshape(B, S, Hkv, Dh)
+    v = (h @ _use(lp["wv"], None, tp)).reshape(B, S, Hkv, Dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, lp["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, lp["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        o = attention(q, k, v, cfg, causal=True)
+        new_cache = (k, v)
+        q_offset = 0
+    else:
+        ck, cv = cache           # [B, Skv, Hkv, Dh], decode: S == 1
+        ck = lax.dynamic_update_slice(ck, k, (0, cache_pos, 0, 0))
+        cv = lax.dynamic_update_slice(cv, v, (0, cache_pos, 0, 0))
+        ck = lax.with_sharding_constraint(ck, P(ax.data, ax.model, None, None))
+        cv = lax.with_sharding_constraint(cv, P(ax.data, ax.model, None, None))
+        o = _attn_xla(q, ck, cv, causal=True, q_offset=cache_pos,
+                      scale=cfg.hd ** -0.5)
+        new_cache = (ck, cv)
+    x = x + (o.reshape(B, S, H * Dh) @ _use(lp["wo"], tp, None))
+
+    h = rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+    if cfg.moe is None:
+        y, aux = _ffn_dense(h, lp, cfg, ax), jnp.float32(0)
+    else:
+        y, aux = moe_mod.moe_ffn(h, lp, cfg.moe, cfg.activation, ax,
+                                 impl=cfg.moe_impl)
+    x = x + y
+    x = dtype_fence(x, cfg.dtype)
+    x = lax.with_sharding_constraint(x, P(ax.data, None, None))
+    return x, new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# full model
+# --------------------------------------------------------------------------
+
+def forward(params, tokens, cfg: TransformerConfig, ax: MeshAxes,
+            caches=None, cache_pos=None):
+    """tokens: [B, S]. caches: None | (k:[L,B,Skv,Hkv,Dh], v). Returns
+    (logits_f32 [B, S, V], new_caches, aux_loss)."""
+    B, S = tokens.shape
+    embed = lax.with_sharding_constraint(params["embed"], P(ax.model, None))
+    x = jnp.take(embed, tokens, axis=0).astype(cfg.dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    x = lax.with_sharding_constraint(x, P(ax.data, None, None))
+    if cache_pos is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    else:
+        positions = jnp.broadcast_to(cache_pos + jnp.arange(S)[None], (B, S))
+
+    def body(carry, xs):
+        x, aux = carry
+        if caches is None:
+            lp = xs
+            x, kv, a = _layer(x, lp, cfg, ax, positions)
+        else:
+            lp, ck, cv = xs
+            x, kv, a = _layer(x, lp, cfg, ax, positions, cache=(ck, cv),
+                              cache_pos=cache_pos)
+        return (x, aux + a), kv
+
+    layer_fn = jax.checkpoint(
+        body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    ) if cfg.remat else body
+
+    xs = params["layers"] if caches is None else (params["layers"], *caches)
+    if cfg.scan_layers:
+        (x, aux), kvs = lax.scan(layer_fn, (x, jnp.float32(0)), xs)
+    else:  # unrolled: accurate cost_analysis; same stacked param layout
+        carry = (x, jnp.float32(0))
+        kv_list = []
+        for i in range(cfg.n_layers):
+            xs_i = jax.tree_util.tree_map(lambda t: t[i], xs)
+            carry, kv = layer_fn(carry, xs_i)
+            kv_list.append(kv)
+        (x, aux) = carry
+        kvs = jax.tree_util.tree_map(lambda *ts: jnp.stack(ts), *kv_list)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    unembed = lax.with_sharding_constraint(params["unembed"],
+                                           P(None, ax.model))
+    logits = (x.astype(jnp.float32) @ unembed.astype(jnp.float32))
+    logits = lax.with_sharding_constraint(logits, P(ax.data, None, ax.model))
+    return logits, kvs, aux
+
+
+def softmax_xent(logits, labels):
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - ll)
+
+
+# --------------------------------------------------------------------------
+# step functions (what the launcher jits / the dry-run lowers)
+# --------------------------------------------------------------------------
+
+def loss_fn(params, batch, cfg, ax):
+    logits, _, aux = forward(params, batch["tokens"], cfg, ax)
+    loss = softmax_xent(logits, batch["labels"])
+    return loss + (cfg.moe.aux_weight * aux / cfg.n_layers if cfg.moe else 0.0)
+
+
+def make_train_step(cfg: TransformerConfig, ax: MeshAxes, opt_cfg,
+                    microbatches: int = 1):
+    """microbatches > 1: gradient accumulation over batch slices — bounds
+    activation memory to 1/M of the full step (the straggler-mitigation /
+    HBM-fit lever for the >=100B train cells; EXPERIMENTS.md §Perf)."""
+    from repro.optim import adamw_update
+
+    grad_fn = jax.value_and_grad(partial(loss_fn, cfg=cfg, ax=ax))
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = grad_fn(params, batch)
+        else:
+            M = microbatches
+
+            def slice_mb(t, i):
+                mb = t.shape[0] // M
+                return lax.dynamic_slice_in_dim(t, i * mb, mb, axis=0)
+
+            def body(carry, i):
+                gacc, lacc = carry
+                mb = jax.tree_util.tree_map(lambda t: slice_mb(t, i), batch)
+                loss, grads = grad_fn(params, mb)
+                gacc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), gacc, grads)
+                return (gacc, lacc + loss), None
+
+            gz = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gacc, lsum), _ = lax.scan(body, (gz, jnp.float32(0)),
+                                       jnp.arange(M))
+            grads = jax.tree_util.tree_map(lambda g: g / M, gacc)
+            loss = lsum / M
+        params, opt_state, gnorm = adamw_update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(cfg: TransformerConfig, ax: MeshAxes):
+    def prefill_step(params, batch):
+        logits, kvs, _ = forward(params, batch["tokens"], cfg, ax)
+        kvs = jax.tree_util.tree_map(
+            lambda t: lax.with_sharding_constraint(
+                t, P(None, ax.data, ax.model, None, None)), kvs)
+        return logits[:, -1], kvs
+
+    return prefill_step
+
+
+def make_serve_step(cfg: TransformerConfig, ax: MeshAxes):
+    """One decode step: new token + KV cache of seq_len."""
+
+    def serve_step(params, token, caches, pos):
+        logits, new_caches, _ = forward(params, token, cfg, ax,
+                                        caches=caches, cache_pos=pos)
+        return logits[:, -1], new_caches
+
+    return serve_step

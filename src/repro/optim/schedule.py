@@ -1,0 +1,17 @@
+"""LR schedules (pure functions of step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, total_steps: int, min_ratio: float = 0.1):
+    frac = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+    return min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+
+
+def linear_warmup_cosine(step, warmup: int, total_steps: int,
+                         min_ratio: float = 0.1):
+    s = step.astype(jnp.float32)
+    w = jnp.clip(s / max(warmup, 1), 0.0, 1.0)
+    return w * cosine_schedule(jnp.maximum(s - warmup, 0.0),
+                               max(total_steps - warmup, 1), min_ratio)

@@ -1,0 +1,20 @@
+import os
+
+# Smoke tests and benches must see 1 device (the dry-run sets its own 512
+# placeholder devices in a separate process). Keep CPU determinism.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@pytest.fixture(scope="session")
+def ax11():
+    from repro.distributed.sharding import MeshAxes
+    return MeshAxes(data=("data",), data_shards=1)

