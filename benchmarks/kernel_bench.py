@@ -14,7 +14,8 @@ import jax.numpy as jnp
 
 from repro.graph import random_graph
 from repro.graph.structure import graph_to_numpy
-from repro.kernels.relax import relax_pallas, relax_jnp, build_dst_tiled_layout
+from repro.kernels.relax import (build_dst_tiled_layout, relax_fixpoint_pallas,
+                                 relax_jnp, relax_masked_pallas, relax_pallas)
 from repro.kernels.flash_attention import flash_attention, attention_ref
 from repro.kernels.embedding_bag import embedding_bag, embedding_bag_jnp
 
@@ -37,7 +38,8 @@ def bench_relax(out):
     src, dst, w = graph_to_numpy(g)
     n = g.n_vertices
     dist = rng.uniform(0, 50, n).astype(np.float32)
-    src_t, w_t, dr_t, bp = build_dst_tiled_layout(src, dst, w, n)
+    src_t, w_t, dr_t, eid_t, bp = build_dst_tiled_layout(src, dst, w, n,
+                                                         with_eid=True)
     dist_pad = jnp.asarray(np.concatenate([dist, np.full(bp - n, np.inf,
                                                          np.float32)]))
     t_j = _timeit(relax_jnp, jnp.asarray(dist), jnp.asarray(src),
@@ -46,6 +48,19 @@ def bench_relax(out):
     t_p = _timeit(lambda d: relax_pallas(d, src_t, w_t, dr_t), dist_pad)
     out("relax_pallas_interp[2k_v,16k_e]", t_p,
         "dst-tiled one-hot min (interpret mode)")
+    # solver-contract variants: frontier mask + pruned mask + relax count
+    front_pad = jnp.asarray(np.concatenate(
+        [np.ones(n, np.float32), np.zeros(bp - n, np.float32)]))
+    pruned_t = jnp.zeros(src_t.shape, jnp.int32)
+    t_m = _timeit(lambda d: relax_masked_pallas(d, front_pad, src_t, w_t,
+                                                dr_t, pruned_t), dist_pad)
+    out("relax_pallas_masked_interp[2k_v,16k_e]", t_m,
+        "+frontier/pruned/count (solver contract)")
+    t_f = _timeit(lambda d: relax_fixpoint_pallas(d, front_pad, src_t, w_t,
+                                                  dr_t, pruned_t, n_sweeps=8),
+                  dist_pad)
+    out("relax_pallas_fixpoint8_interp[2k_v,16k_e]", t_f,
+        "8 fused sweeps/one pallas_call (early-out)")
 
 
 def bench_flash(out):

@@ -96,8 +96,31 @@ def bench_local_solver(out):
             f"relax={int(stats.relaxations)} rounds={int(stats.rounds)}")
 
 
+def bench_pallas_solver(out):
+    """End-to-end pallas vs bellman vs delta on every bench graph.
+
+    The dst-tiled layout rides in the shards (built once at partition
+    time); interpret-mode wall times are NOT TPU perf — MTEPS here tracks
+    the CPU-emulated trajectory so regressions in the kernel path are
+    visible from this PR onward."""
+    for name, build in BENCH_GRAPHS.items():
+        g = build()
+        source = int(g.src[0])
+        sh = build_shards(g, 8, enumerate_triangles=False)
+        ref = dijkstra_reference(g, source)
+        for solver in ("bellman", "delta", "pallas"):
+            cfg = SsspConfig(local_solver=solver, prune_online=False)
+            dist, stats, t = _solve_timed(sh, source, cfg)
+            ok = np.allclose(dist, ref, 1e-5, 1e-4)
+            mteps = int(stats.relaxations) / t / 1e6
+            out(f"local_solver[{solver}][{name}]", t * 1e6,
+                f"mteps={mteps:.4f} relax={int(stats.relaxations)} "
+                f"rounds={int(stats.rounds)} ok={ok}")
+
+
 def run_all(out):
     bench_scaling(out)
     bench_trishla(out)
     bench_toka(out)
     bench_local_solver(out)
+    bench_pallas_solver(out)

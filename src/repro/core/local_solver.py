@@ -12,6 +12,14 @@ before communicating) is iterated *frontier-masked relaxation*:
   settle-in-distance-order behaviour and avoiding wasted relaxations on
   vertices whose distance will still improve (Meyer & Sanders 2003; the
   paper cites Δ-stepping as the synchronous baseline).
+- ``pallas``: the dst-tiled Pallas relax kernel
+  (``repro.kernels.relax``) run as a fused multi-sweep fixpoint — up to
+  ``pallas_sweeps`` frontier-chased sweeps execute inside ONE
+  ``pallas_call`` (no XLA re-entry per sweep, no scatter lowering); a thin
+  ``lax.while_loop`` re-invokes the kernel on the residual frontier until
+  empty. Requires the dst-tiled edge layout precomputed by
+  ``build_shards`` (``SsspShards.rx_*``); silently falls back to
+  ``bellman`` when the layout is absent.
 
 All functions operate on ONE shard's local arrays (no leading P dim); the
 driver vmaps (sim backend) or shard_maps (distributed backend) over shards.
@@ -22,6 +30,8 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.relax import relax_fixpoint_pallas
 
 INF = jnp.float32(jnp.inf)
 
@@ -87,13 +97,64 @@ def local_fixpoint_delta(dist, active, loc_src, loc_dst, loc_w, pruned_loc,
     return LocalResult(dist=out[0], changed=out[3], relaxations=out[4])
 
 
+def local_fixpoint_pallas(dist, active, pruned_loc, relax_layout, *,
+                          vb: int, max_iters: int, sweeps: int = 8,
+                          interpret: bool = True) -> LocalResult:
+    """Fused Pallas fixpoint over the precomputed dst-tiled edge layout.
+
+    ``relax_layout`` = (src_t, w_t, dstrel_t, eid_t), each
+    [n_vtiles, n_chunks, EB] for THIS shard. Each kernel invocation runs up
+    to ``sweeps`` frontier-chased sweeps in one ``pallas_call``; the outer
+    ``while_loop`` re-enters only when the residual frontier is non-empty
+    (i.e. roughly every ``sweeps``-th XLA step of the bellman path).
+    """
+    src_t, w_t, dstrel_t, eid_t = relax_layout
+    n_vtiles, _, eb = src_t.shape
+    block = dist.shape[0]
+    bp = n_vtiles * vb
+    # pad to the kernel's tile-aligned block; padded slots never win a min
+    dist_pad = jnp.full((bp,), INF).at[:block].set(dist)
+    front_pad = jnp.zeros((bp,), jnp.float32).at[:block].set(
+        active.astype(jnp.float32))
+    # gather the runtime pruned mask into tiled edge order (eid sentinel is
+    # out of range -> fill 0 = not pruned, i.e. padding stays inert)
+    pruned_t = jnp.take(pruned_loc.astype(jnp.int32), eid_t, mode="fill",
+                        fill_value=0)
+
+    def cond(c):
+        _, front, _, it = c
+        return jnp.any(front > 0) & (it < max_iters)
+
+    def body(c):
+        d, front, nrel, it = c
+        new_d, resid, n = relax_fixpoint_pallas(
+            d, front, src_t, w_t, dstrel_t, pruned_t, vb=vb, eb=eb,
+            n_sweeps=sweeps, interpret=interpret)
+        return new_d, resid, nrel + n, it + jnp.int32(sweeps)
+
+    out = jax.lax.while_loop(
+        cond, body, (dist_pad, front_pad, jnp.int32(0), jnp.int32(0)))
+    new_dist = out[0][:block]
+    return LocalResult(dist=new_dist, changed=jnp.any(new_dist < dist),
+                       relaxations=out[2])
+
+
 def local_fixpoint(dist, active, loc_src, loc_dst, loc_w, pruned_loc, *,
                    solver: str = "bellman", max_iters: int = 10_000,
-                   delta: float = 4.0) -> LocalResult:
+                   delta: float = 4.0, relax_layout=None, relax_vb: int = 128,
+                   pallas_sweeps: int = 8,
+                   pallas_interpret: bool = True) -> LocalResult:
+    if solver == "pallas" and relax_layout is None:
+        solver = "bellman"   # no dst-tiled layout carried by the shards
     if solver == "bellman":
         return local_fixpoint_bellman(dist, active, loc_src, loc_dst, loc_w,
                                       pruned_loc, max_iters)
     if solver == "delta":
         return local_fixpoint_delta(dist, active, loc_src, loc_dst, loc_w,
                                     pruned_loc, max_iters, delta)
+    if solver == "pallas":
+        return local_fixpoint_pallas(dist, active, pruned_loc, relax_layout,
+                                     vb=relax_vb, max_iters=max_iters,
+                                     sweeps=pallas_sweeps,
+                                     interpret=pallas_interpret)
     raise ValueError(f"unknown local solver {solver!r}")

@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.graph.structure import Graph, PartitionedGraph
 from repro.core.partition import partition_1d
+from repro.kernels.relax import build_dst_tiled_layout
 
 
 def _pad2(rows, width, fill, dtype):
@@ -67,6 +68,17 @@ class SsspShards:
     n_vertices: int = dataclasses.field(metadata=dict(static=True))
     n_parts: int = dataclasses.field(metadata=dict(static=True))
     block: int = dataclasses.field(metadata=dict(static=True))
+    # dst-tiled layout of the LOCAL edges for the Pallas relax kernel
+    # (built once at partition time; None when relax_layout=False). The
+    # tiled slots are a permutation of [0, e_loc) plus padding; rx_eid maps
+    # each slot back to its local edge id (sentinel = e_loc) so the runtime
+    # Trishla pruned mask can be gathered into tiled order per solve.
+    rx_src: jax.Array | None = None     # [P, n_vtiles, n_chunks, EB] int32
+    rx_w: jax.Array | None = None       # [P, n_vtiles, n_chunks, EB] f32
+    rx_dstrel: jax.Array | None = None  # [P, n_vtiles, n_chunks, EB] int32
+    rx_eid: jax.Array | None = None     # [P, n_vtiles, n_chunks, EB] int32
+    rx_vb: int = dataclasses.field(default=128, metadata=dict(static=True))
+    rx_eb: int = dataclasses.field(default=512, metadata=dict(static=True))
 
     @property
     def e_loc(self):
@@ -84,9 +96,21 @@ class SsspShards:
     def bucket_cap(self):
         return self.recv_idx.shape[2]
 
+    @property
+    def has_relax_layout(self):
+        return self.rx_src is not None
+
+    @property
+    def relax_layout(self):
+        """Per-call tuple consumed by ``local_fixpoint`` (or None)."""
+        if self.rx_src is None:
+            return None
+        return (self.rx_src, self.rx_w, self.rx_dstrel, self.rx_eid)
+
 
 def build_shards(g: Graph, n_parts: int, max_triangles_per_part: int | None = None,
-                 enumerate_triangles: bool = True) -> SsspShards:
+                 enumerate_triangles: bool = True, relax_layout: bool = True,
+                 relax_vb: int = 128, relax_eb: int = 512) -> SsspShards:
     pg = partition_1d(g, n_parts)
     P, block, n = pg.n_parts, pg.block, pg.n_vertices
 
@@ -215,6 +239,43 @@ def build_shards(g: Graph, n_parts: int, max_triangles_per_part: int | None = No
             tri_uj[p, k], tri_ui[p, k], tri_ij[p, k] = a, b, c
             tri_valid[p, k] = True
 
+    # ---- dst-tiled layout of the local edges (Pallas relax kernel) --------
+    # Built once here — NOT per solve. Per-shard layouts share n_vtiles
+    # (same block) but can differ in chunk count; pad to the max so they
+    # stack into one [P, n_vtiles, n_chunks, EB] array for the sim backend
+    # (the shard_map backend slices its own shard back out).
+    rx = dict(rx_src=None, rx_w=None, rx_dstrel=None, rx_eid=None)
+    if relax_layout:
+        per_shard = []
+        for p in range(P):
+            src_t, w_t, dr_t, eid_t, _bp = build_dst_tiled_layout(
+                loc_rows_src[p], loc_rows_dst[p], loc_rows_w[p], block,
+                vb=relax_vb, eb=relax_eb, with_eid=True)
+            per_shard.append((np.asarray(src_t), np.asarray(w_t),
+                              np.asarray(dr_t), np.asarray(eid_t)))
+        n_vtiles = per_shard[0][0].shape[0]
+        block_pad = n_vtiles * relax_vb
+        n_chunks = max(lay[0].shape[1] for lay in per_shard)
+        rx_src = np.full((P, n_vtiles, n_chunks, relax_eb), block_pad - 1,
+                         np.int64)
+        rx_w = np.full((P, n_vtiles, n_chunks, relax_eb), np.inf, np.float32)
+        rx_dstrel = np.zeros((P, n_vtiles, n_chunks, relax_eb), np.int64)
+        rx_eid = np.full((P, n_vtiles, n_chunks, relax_eb), e_loc, np.int64)
+        for p, (src_t, w_t, dr_t, eid_t) in enumerate(per_shard):
+            nc = src_t.shape[1]
+            rx_src[p, :, :nc] = src_t
+            rx_w[p, :, :nc] = w_t
+            rx_dstrel[p, :, :nc] = dr_t
+            # builder sentinel is the shard's own edge count; restamp to the
+            # padded-row sentinel e_loc so the runtime gather is uniform
+            eid = eid_t.astype(np.int64)
+            eid[eid == len(loc_rows_src[p])] = e_loc
+            rx_eid[p, :, :nc] = eid
+        rx = dict(rx_src=jnp.asarray(rx_src, jnp.int32),
+                  rx_w=jnp.asarray(rx_w, jnp.float32),
+                  rx_dstrel=jnp.asarray(rx_dstrel, jnp.int32),
+                  rx_eid=jnp.asarray(rx_eid, jnp.int32))
+
     return SsspShards(
         loc_src=jnp.asarray(_pad2(loc_rows_src, e_loc, block, np.int64), jnp.int32),
         loc_dst=jnp.asarray(_pad2(loc_rows_dst, e_loc, block, np.int64), jnp.int32),
@@ -235,4 +296,7 @@ def build_shards(g: Graph, n_parts: int, max_triangles_per_part: int | None = No
         n_vertices=n,
         n_parts=P,
         block=block,
+        rx_vb=relax_vb,
+        rx_eb=relax_eb,
+        **rx,
     )

@@ -38,6 +38,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import toka as toka_mod
 from repro.core.local_solver import local_fixpoint
 from repro.core.shards import SsspShards
@@ -53,9 +54,11 @@ INF = jnp.float32(jnp.inf)
 class SsspConfig:
     exchange: str = "bucket"        # bucket | pmin | a2a_dense
     toka: str = "toka0"             # toka0 | toka1 | toka2
-    local_solver: str = "bellman"   # bellman | delta
+    local_solver: str = "bellman"   # bellman | delta | pallas
     delta: float = 4.0
     local_iters: int = 10_000
+    pallas_sweeps: int = 8          # relaxation sweeps fused per pallas_call
+    pallas_interpret: bool = True   # interpret mode (CPU); False on real TPU
     prune_online: bool = True       # Trishla in the idle branch
     prune_offline_passes: int = 0   # vectorized Trishla before the solve
     tri_chunk: int = 256
@@ -98,7 +101,10 @@ def _phase_local(shard: SsspShards, dist, active, pruned, cursor, cfg: SsspConfi
         res = local_fixpoint(
             dist, active, shard.loc_src, shard.loc_dst, shard.loc_w,
             pruned[:e_loc], solver=cfg.local_solver,
-            max_iters=cfg.local_iters, delta=cfg.delta)
+            max_iters=cfg.local_iters, delta=cfg.delta,
+            relax_layout=shard.relax_layout, relax_vb=shard.rx_vb,
+            pallas_sweeps=cfg.pallas_sweeps,
+            pallas_interpret=cfg.pallas_interpret)
         return res.dist, pruned, cursor, res.relaxations, jnp.int32(0)
 
     def prune(dist, pruned, cursor):
@@ -246,7 +252,7 @@ def _toka_done(cfg, comm, carry, new_active, sends, recvs, inter_edges, n_parts,
         else:
             zero = jnp.zeros_like(sends)
             acct = _vcall(toka_mod.toka2_account, vmapped, carry.toka2,
-                          jnp.minimum(sends, 1) * 0 + zero, zero)
+                          zero, zero)
             # blacken on send still applies (color drives termination)
             color = jnp.where(sends > 0, jnp.int32(1), acct.color)
             acct = acct._replace(color=color)
@@ -345,7 +351,7 @@ def _init_carry(sh: SsspShards, source: int, cfg: SsspConfig, rank, vmapped: boo
 
     return _Carry(dist=dist, active=active, pruned=pruned, tri_cursor=zero,
                   last_sent=last_sent, msg_count=zero, toka2=toka2, done=done,
-                  rounds=jnp.zeros((), jnp.int32) if not vmapped else jnp.zeros((), jnp.int32),
+                  rounds=jnp.zeros((), jnp.int32),
                   relaxations=zero32, msgs_sent=zero32, msgs_recv=zero32)
 
 
@@ -410,8 +416,8 @@ def build_shmap_solver(sh_spec: SsspShards, cfg: SsspConfig, mesh,
     rspec = P()
     in_specs = jax.tree_util.tree_map(lambda _: pspec, sh_spec)
     out_specs = (pspec, SsspStats(rspec, rspec, rspec, rspec, rspec))
-    return jax.jit(jax.shard_map(body, mesh=mesh, in_specs=(in_specs,),
-                                 out_specs=out_specs, check_vma=False))
+    return jax.jit(compat.shard_map(body, mesh=mesh, in_specs=(in_specs,),
+                                    out_specs=out_specs, check_vma=False))
 
 
 def solve_shmap(sh: SsspShards, source: int, cfg: SsspConfig, mesh, axis_names):

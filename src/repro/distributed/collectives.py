@@ -15,15 +15,23 @@ import jax.numpy as jnp
 from jax import lax
 
 
+def _axis_size(a) -> int:
+    if hasattr(lax, "axis_size"):          # jax >= 0.5
+        return lax.axis_size(a)
+    from jax._src import core
+    frame = core.axis_frame(a)
+    return frame if isinstance(frame, int) else frame.size
+
+
 def axis_sizes(axis_names) -> tuple[int, ...]:
-    return tuple(lax.axis_size(a) for a in axis_names)
+    return tuple(_axis_size(a) for a in axis_names)
 
 
 def flat_rank(axis_names) -> jax.Array:
     """Row-major flattened rank over the given mesh axes."""
     r = jnp.int32(0)
     for a in axis_names:
-        r = r * lax.axis_size(a) + lax.axis_index(a)
+        r = r * _axis_size(a) + lax.axis_index(a)
     return r
 
 

@@ -1,2 +1,5 @@
-from repro.kernels.relax.ops import relax_pallas, relax_jnp, build_dst_tiled_layout
+from repro.kernels.relax.ops import (
+    build_dst_tiled_layout, relax_fixpoint_pallas, relax_jnp,
+    relax_masked_pallas, relax_pallas,
+)
 from repro.kernels.relax.ref import relax_ref

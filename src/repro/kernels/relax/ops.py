@@ -1,4 +1,4 @@
-"""jit'd wrapper + host-side dst-tiled layout builder for the relax kernel."""
+"""jit'd wrappers + host-side dst-tiled layout builder for the relax kernel."""
 from __future__ import annotations
 
 from functools import partial
@@ -7,26 +7,35 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.relax.relax import relax_dst_tiled
+from repro.kernels.relax.relax import (
+    relax_dst_tiled, relax_dst_tiled_fixpoint, relax_dst_tiled_masked,
+)
 
 
 def build_dst_tiled_layout(src, dst, w, n_vertices: int, *, vb: int = 128,
-                           eb: int = 512):
+                           eb: int = 512, with_eid: bool = False):
     """One-time host preprocessing: edges -> [n_vtiles, n_chunks, EB] layout.
 
     Padding entries use src = block_pad - 1 (gather stays in range; the
     padded distance slot is +inf) and w = +inf so they never win the min.
+
+    With ``with_eid=True`` also returns eid_t: the position of each tiled
+    slot in the ORIGINAL edge list (sentinel = len(src) for padding), so
+    runtime per-edge state (the Trishla pruned mask) can be gathered into
+    tiled order without rebuilding the layout.
     """
     src = np.asarray(src, np.int64)
     dst = np.asarray(dst, np.int64)
     w = np.asarray(w, np.float32)
+    n_edges = len(src)
+    eid = np.arange(n_edges, dtype=np.int64)
     keep = np.isfinite(w)
-    src, dst, w = src[keep], dst[keep], w[keep]
+    src, dst, w, eid = src[keep], dst[keep], w[keep], eid[keep]
 
     n_vtiles = max(-(-n_vertices // vb), 1)
     block_pad = n_vtiles * vb
     order = np.argsort(dst, kind="stable")
-    src, dst, w = src[order], dst[order], w[order]
+    src, dst, w, eid = src[order], dst[order], w[order], eid[order]
     tile_of = dst // vb
     counts = np.bincount(tile_of, minlength=n_vtiles)
     n_chunks = max(int(-(-counts.max() // eb)) if counts.size else 1, 1)
@@ -34,6 +43,7 @@ def build_dst_tiled_layout(src, dst, w, n_vertices: int, *, vb: int = 128,
     src_t = np.full((n_vtiles, n_chunks * eb), block_pad - 1, np.int64)
     w_t = np.full((n_vtiles, n_chunks * eb), np.inf, np.float32)
     dstrel_t = np.zeros((n_vtiles, n_chunks * eb), np.int64)
+    eid_t = np.full((n_vtiles, n_chunks * eb), n_edges, np.int64)
     starts = np.zeros(n_vtiles + 1, np.int64)
     starts[1:] = np.cumsum(counts)
     for t in range(n_vtiles):
@@ -42,12 +52,15 @@ def build_dst_tiled_layout(src, dst, w, n_vertices: int, *, vb: int = 128,
         src_t[t, :k] = src[lo:hi]
         w_t[t, :k] = w[lo:hi]
         dstrel_t[t, :k] = dst[lo:hi] - t * vb
+        eid_t[t, :k] = eid[lo:hi]
 
     shape3 = (n_vtiles, n_chunks, eb)
-    return (jnp.asarray(src_t.reshape(shape3), jnp.int32),
-            jnp.asarray(w_t.reshape(shape3), jnp.float32),
-            jnp.asarray(dstrel_t.reshape(shape3), jnp.int32),
-            block_pad)
+    out = (jnp.asarray(src_t.reshape(shape3), jnp.int32),
+           jnp.asarray(w_t.reshape(shape3), jnp.float32),
+           jnp.asarray(dstrel_t.reshape(shape3), jnp.int32))
+    if with_eid:
+        return out + (jnp.asarray(eid_t.reshape(shape3), jnp.int32), block_pad)
+    return out + (block_pad,)
 
 
 @partial(jax.jit, static_argnames=("vb", "eb", "interpret"))
@@ -55,6 +68,28 @@ def relax_pallas(dist_pad, src_t, w_t, dstrel_t, *, vb: int = 128,
                  eb: int = 512, interpret: bool = True):
     return relax_dst_tiled(dist_pad, src_t, w_t, dstrel_t, vb=vb, eb=eb,
                            interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("vb", "eb", "interpret"))
+def relax_masked_pallas(dist_pad, front_pad, src_t, w_t, dstrel_t, pruned_t,
+                        *, vb: int = 128, eb: int = 512,
+                        interpret: bool = True):
+    """One frontier-masked sweep. Returns (new_dist, n_relax scalar)."""
+    new, nrel = relax_dst_tiled_masked(dist_pad, front_pad, src_t, w_t,
+                                       dstrel_t, pruned_t, vb=vb, eb=eb,
+                                       interpret=interpret)
+    return new, nrel[0]
+
+
+@partial(jax.jit, static_argnames=("vb", "eb", "n_sweeps", "interpret"))
+def relax_fixpoint_pallas(dist_pad, front_pad, src_t, w_t, dstrel_t, pruned_t,
+                          *, vb: int = 128, eb: int = 512, n_sweeps: int = 8,
+                          interpret: bool = True):
+    """Fused multi-sweep solve. Returns (new_dist, residual_frontier, n_relax)."""
+    new, resid, nrel = relax_dst_tiled_fixpoint(
+        dist_pad, front_pad, src_t, w_t, dstrel_t, pruned_t, vb=vb, eb=eb,
+        n_sweeps=n_sweeps, interpret=interpret)
+    return new, resid, nrel[0]
 
 
 @jax.jit

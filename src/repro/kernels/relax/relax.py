@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: blocked min-plus edge relaxation (SP-Async hot loop).
+"""Pallas TPU kernels: blocked min-plus edge relaxation (SP-Async hot loop).
 
 TPU adaptation (vs. the CUDA-style atomicMin scatter a GPU port would use):
 scatter has no efficient TPU lowering, so edges are *pre-tiled by
@@ -9,13 +9,35 @@ VMEM. The source-distance gather is a 1-D dynamic gather from the
 VMEM-resident distance vector (Mosaic ``DynamicGatherOp``; validated here
 in interpret mode since the container is CPU-only).
 
-Grid: ``(n_vtiles, n_chunks)`` — the chunk axis streams over a tile's edge
-list in EB-sized pieces, revisiting the same output block (reduction
-pattern; initialized at chunk 0).
+Three entry points, in increasing integration with the solver:
+
+- ``relax_dst_tiled``: one unmasked sweep (the original micro-benchmark
+  kernel). Grid ``(n_vtiles, n_chunks)``.
+- ``relax_dst_tiled_masked``: one sweep with the local solver's full
+  contract — frontier masking (only edges whose source improved last sweep
+  relax), per-edge Trishla pruned masks, and relaxation counting (the TEPS
+  numerator). Grid ``(n_vtiles, n_chunks)`` + an SMEM count accumulator.
+- ``relax_dst_tiled_fixpoint``: the fused local solve — the whole
+  frontier-chased fixpoint runs inside ONE ``pallas_call`` with grid
+  ``(n_sweeps, n_vtiles, n_chunks)`` instead of re-entering XLA per sweep.
+  Distances update in place (Gauss–Seidel within a sweep: tiles later in
+  the grid see earlier tiles' improvements, which only accelerates
+  convergence of the monotone min-plus operator). The frontier for sweep
+  ``s`` is recomputed at sweep start as ``dist < prev`` (vertices improved
+  during sweep ``s-1``); an SMEM ``changed`` flag early-outs the remaining
+  sweeps once a sweep makes no improvement, so a converged call costs only
+  predicated no-op grid steps. Returns the residual frontier (vertices
+  improved in the final sweep) so a thin outer loop can re-invoke the
+  kernel until empty when ``n_sweeps`` did not suffice.
+
+The chunk axis streams over a tile's edge list in EB-sized pieces,
+revisiting the same output block (reduction pattern; initialized at chunk 0
+/ sweep 0).
 
 VMEM working set per step:
   dist (full block)            4 * block_pad
-  edge chunk (src, w, dstrel)  ~12 * EB
+  prev + frontier (fixpoint)   8 * block_pad
+  edge chunk (src, w, dstrel, pruned) ~16 * EB
   one-hot tile                 4 * EB * VB   (dominant; 512*128*4 = 256 KiB)
 """
 from __future__ import annotations
@@ -25,8 +47,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-INF = jnp.float32(jnp.inf)
+INF = float("inf")
 
 
 def _relax_kernel(dist_ref, src_ref, w_ref, dstrel_ref, out_ref, *, vb: int):
@@ -44,11 +67,7 @@ def _relax_kernel(dist_ref, src_ref, w_ref, dstrel_ref, out_ref, *, vb: int):
 
     d_src = jnp.take(dist_ref[...], src)   # 1-D dynamic gather from VMEM
     cand = d_src + w                       # [EB]
-
-    eb = cand.shape[0]
-    lane = jax.lax.broadcasted_iota(jnp.int32, (eb, vb), 1)
-    onehot = dstrel[:, None] == lane       # [EB, VB]
-    mins = jnp.min(jnp.where(onehot, cand[:, None], jnp.float32(float("inf"))), axis=0)
+    mins = _tile_min(cand, dstrel, vb=vb)
     out_ref[...] = jnp.minimum(out_ref[...], mins)
 
 
@@ -75,3 +94,173 @@ def relax_dst_tiled(dist_pad, src_t, w_t, dstrel_t, *, vb: int, eb: int,
         out_shape=jax.ShapeDtypeStruct((n_vtiles * vb,), dist_pad.dtype),
         interpret=interpret,
     )(dist_pad, src_t, w_t, dstrel_t)
+
+
+def _edge_chunk(src_ref, w_ref, dstrel_ref, pruned_ref):
+    """Load one [EB] edge chunk with the Trishla mask folded into w."""
+    src = src_ref[0, 0, :]
+    w = jnp.where(pruned_ref[0, 0, :] > 0, INF, w_ref[0, 0, :])
+    dstrel = dstrel_ref[0, 0, :]
+    return src, w, dstrel
+
+
+def _tile_min(cand, dstrel, *, vb: int):
+    """[EB] candidates -> [VB] per-destination minima (one-hot reduce)."""
+    eb = cand.shape[0]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (eb, vb), 1)
+    onehot = dstrel[:, None] == lane
+    return jnp.min(jnp.where(onehot, cand[:, None], INF), axis=0)
+
+
+def _relax_masked_kernel(dist_ref, front_ref, src_ref, w_ref, dstrel_ref,
+                         pruned_ref, out_ref, nrel_ref, acc_ref, *, vb: int,
+                         n_vtiles: int, n_chunks: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init_acc():
+        acc_ref[0] = 0
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = dist_ref[pl.dslice(i * vb, vb)]
+
+    src, w, dstrel = _edge_chunk(src_ref, w_ref, dstrel_ref, pruned_ref)
+    f_src = jnp.take(front_ref[...], src) > 0
+    d_src = jnp.take(dist_ref[...], src)
+    cand = jnp.where(f_src, d_src + w, INF)
+    acc_ref[0] = acc_ref[0] + jnp.sum(f_src & (w < INF)).astype(jnp.int32)
+    mins = _tile_min(cand, dstrel, vb=vb)
+    out_ref[...] = jnp.minimum(out_ref[...], mins)
+
+    @pl.when((i == n_vtiles - 1) & (j == n_chunks - 1))
+    def _fin():
+        nrel_ref[0] = acc_ref[0]
+
+
+def relax_dst_tiled_masked(dist_pad, front_pad, src_t, w_t, dstrel_t,
+                           pruned_t, *, vb: int, eb: int,
+                           interpret: bool = True):
+    """One frontier-masked, Trishla-pruned sweep with relaxation counting.
+
+    front_pad: [block_pad] f32 0/1; pruned_t: [n_vtiles, n_chunks, EB] int32
+    0/1 in tiled edge order. Returns (new_dist [block_pad], n_relax [1])."""
+    n_vtiles, n_chunks, eb_l = src_t.shape
+    assert eb_l == eb and dist_pad.shape[0] == n_vtiles * vb
+
+    bp = dist_pad.shape[0]
+    grid = (n_vtiles, n_chunks)
+    edge_spec = pl.BlockSpec((1, 1, eb), lambda i, j: (i, j, 0))
+    kernel = functools.partial(_relax_masked_kernel, vb=vb,
+                               n_vtiles=n_vtiles, n_chunks=n_chunks)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bp,), lambda i, j: (0,)),
+            pl.BlockSpec((bp,), lambda i, j: (0,)),
+            edge_spec, edge_spec, edge_spec, edge_spec,
+        ],
+        out_specs=[
+            pl.BlockSpec((vb,), lambda i, j: (i,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp,), dist_pad.dtype),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(dist_pad, front_pad, src_t, w_t, dstrel_t, pruned_t)
+
+
+def _relax_fixpoint_kernel(dist_ref, front_ref, src_ref, w_ref, dstrel_ref,
+                           pruned_ref, out_ref, resid_ref, nrel_ref,
+                           prev_ref, fcur_ref, flags_ref, *, vb: int,
+                           n_vtiles: int, n_chunks: int, n_sweeps: int):
+    """Whole local fixpoint in one grid: (sweep, vertex tile, edge chunk).
+
+    SMEM flags: [0] = sweep-active (early-out once a sweep changes
+    nothing), [1] = relaxation count accumulator."""
+    s = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    first = (s == 0) & (i == 0) & (j == 0)
+    sweep_start = (i == 0) & (j == 0)
+    last = (s == n_sweeps - 1) & (i == n_vtiles - 1) & (j == n_chunks - 1)
+
+    @pl.when(first)
+    def _init():
+        out_ref[...] = dist_ref[...]
+        prev_ref[...] = dist_ref[...]
+        fcur_ref[...] = front_ref[...]
+        flags_ref[0] = jnp.any(front_ref[...] > 0).astype(jnp.int32)
+        flags_ref[1] = 0
+
+    @pl.when(sweep_start & (s > 0) & (flags_ref[0] > 0))
+    def _advance_frontier():
+        newf = (out_ref[...] < prev_ref[...]).astype(jnp.float32)
+        fcur_ref[...] = newf
+        flags_ref[0] = jnp.any(newf > 0).astype(jnp.int32)
+        prev_ref[...] = out_ref[...]
+
+    @pl.when(flags_ref[0] > 0)
+    def _relax():
+        src, w, dstrel = _edge_chunk(src_ref, w_ref, dstrel_ref, pruned_ref)
+        f_src = jnp.take(fcur_ref[...], src) > 0
+        # Gauss–Seidel: gather from the live distances, not a sweep snapshot
+        d_src = jnp.take(out_ref[...], src)
+        cand = jnp.where(f_src, d_src + w, INF)
+        flags_ref[1] = flags_ref[1] + jnp.sum(f_src & (w < INF)).astype(jnp.int32)
+        mins = _tile_min(cand, dstrel, vb=vb)
+        cur = out_ref[pl.dslice(i * vb, vb)]
+        out_ref[pl.dslice(i * vb, vb)] = jnp.minimum(cur, mins)
+
+    @pl.when(last)
+    def _fin():
+        resid_ref[...] = (out_ref[...] < prev_ref[...]).astype(jnp.float32)
+        nrel_ref[0] = flags_ref[1]
+
+
+def relax_dst_tiled_fixpoint(dist_pad, front_pad, src_t, w_t, dstrel_t,
+                             pruned_t, *, vb: int, eb: int, n_sweeps: int,
+                             interpret: bool = True):
+    """Fused multi-sweep local solve: up to ``n_sweeps`` frontier-chased
+    relaxation sweeps inside one ``pallas_call``.
+
+    Returns (new_dist [block_pad], residual_frontier [block_pad] f32 0/1,
+    n_relax [1] i32). The residual frontier is empty iff the fixpoint was
+    reached within ``n_sweeps`` — callers loop on it."""
+    n_vtiles, n_chunks, eb_l = src_t.shape
+    assert eb_l == eb and dist_pad.shape[0] == n_vtiles * vb
+
+    bp = dist_pad.shape[0]
+    grid = (n_sweeps, n_vtiles, n_chunks)
+    full_spec = pl.BlockSpec((bp,), lambda s, i, j: (0,))
+    edge_spec = pl.BlockSpec((1, 1, eb), lambda s, i, j: (i, j, 0))
+    kernel = functools.partial(_relax_fixpoint_kernel, vb=vb,
+                               n_vtiles=n_vtiles, n_chunks=n_chunks,
+                               n_sweeps=n_sweeps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[full_spec, full_spec,
+                  edge_spec, edge_spec, edge_spec, edge_spec],
+        out_specs=[
+            full_spec,                                   # live distances
+            full_spec,                                   # residual frontier
+            pl.BlockSpec((1,), lambda s, i, j: (0,)),    # relaxation count
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp,), dist_pad.dtype),
+            jax.ShapeDtypeStruct((bp,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bp,), jnp.float32),              # prev-sweep snapshot
+            pltpu.VMEM((bp,), jnp.float32),              # current frontier
+            pltpu.SMEM((2,), jnp.int32),                 # active flag, count
+        ],
+        interpret=interpret,
+    )(dist_pad, front_pad, src_t, w_t, dstrel_t, pruned_t)

@@ -31,7 +31,8 @@ def main():
                    choices=["bucket", "pmin", "a2a_dense"])
     p.add_argument("--toka", default="toka0",
                    choices=["toka0", "toka1", "toka2"])
-    p.add_argument("--solver", default="bellman", choices=["bellman", "delta"])
+    p.add_argument("--solver", default="bellman",
+                   choices=["bellman", "delta", "pallas"])
     p.add_argument("--delta", type=float, default=4.0)
     p.add_argument("--no-prune", action="store_true")
     p.add_argument("--backend", default="sim", choices=["sim", "shmap"])
@@ -62,9 +63,9 @@ def main():
         dist, stats = solve_sim(sh, source, cfg)
     else:
         import jax
+        from repro import compat
         n_dev = len(jax.devices())
-        mesh = jax.make_mesh((n_dev,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((n_dev,), ("data",))
         dist, stats = solve_shmap(sh, source, cfg, mesh, ("data",))
     dt = time.time() - t0
     mteps = int(stats.relaxations) / dt / 1e6

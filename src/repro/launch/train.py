@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.checkpoint import CheckpointManager
 from repro.configs.registry import ARCHS, _load
 from repro.data import TokenStream, RecsysBatcher
@@ -124,7 +125,7 @@ def main(argv=None):
 
     it = iter(data)
     losses = []
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         t0 = time.time()
         for s in range(start, args.steps):
             batch = next(it)

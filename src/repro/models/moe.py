@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 
 def _routing_group(topi_g, E: int, k: int, Cg: int):
     """Index-level routing for one group — int32 arrays only, no D-wide
@@ -132,7 +134,7 @@ def _expert_block_shmap(xg, slot_token, topi_g, pos, keep, topv_g,
         w=P_(ax.model, None, None),
         out=P_(ax.data, None, None),
     )
-    return jax.shard_map(
+    return compat.shard_map(
         body,
         in_specs=(specs["xg"], specs["slot"], specs["tok"], specs["tok"],
                   specs["tok"], specs["tok"], specs["w"], specs["w"],

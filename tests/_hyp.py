@@ -1,0 +1,54 @@
+"""``hypothesis`` compatibility shim for the property-based tests.
+
+When hypothesis is installed (see requirements-dev.txt) the real library is
+re-exported unchanged. When it is absent — e.g. a bare container — the
+tests still COLLECT and RUN: ``given`` degrades to a deterministic sampler
+that draws a fixed number of pseudo-random examples per test (seeded, so
+failures reproduce), and ``settings`` becomes a no-op. Only the
+``st.integers`` strategy is emulated because that is all these tests use.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 5
+
+    class _Integers:
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def draw(self, rng):
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class strategies:  # noqa: N801 — mimics the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+    def settings(**_kw):
+        def deco(f):
+            return f
+        return deco
+
+    def given(**strats):
+        keys = sorted(strats)
+
+        def deco(f):
+            def wrapper():
+                rng = np.random.default_rng(0xC0FFEE)
+                for _ in range(_FALLBACK_EXAMPLES):
+                    f(**{k: strats[k].draw(rng) for k in keys})
+
+            # NOT functools.wraps: copying __wrapped__ would expose the
+            # original signature and pytest would treat params as fixtures
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            return wrapper
+
+        return deco

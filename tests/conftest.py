@@ -10,8 +10,8 @@ import pytest  # noqa: E402
 
 @pytest.fixture(scope="session")
 def mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro import compat
+    return compat.make_mesh((1, 1), ("data", "model"))
 
 
 @pytest.fixture(scope="session")

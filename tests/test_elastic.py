@@ -25,8 +25,8 @@ RESTORE_PROG = textwrap.dedent("""
     from repro.checkpoint import restore_checkpoint
 
     ckpt = sys.argv[1]
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro import compat
+    mesh = compat.make_mesh((2, 4), ("data", "model"))
     target = {"w": jax.ShapeDtypeStruct((16, 32), jnp.float32),
               "b": jax.ShapeDtypeStruct((32,), jnp.float32)}
     sh = {"w": NamedSharding(mesh, P("data", "model")),

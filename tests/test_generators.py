@@ -1,6 +1,6 @@
 """Graph generator invariants (the paper's §IV setup)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.graph import rmat_graph, road_grid_graph, random_graph
 from repro.graph.structure import graph_to_numpy

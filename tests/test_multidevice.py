@@ -23,17 +23,17 @@ PROG = textwrap.dedent("""
     from repro.core import SsspConfig, build_shards, solve_shmap
     from repro.distributed.collectives import ring_permute, flat_rank
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro import compat
+    mesh = compat.make_mesh((2, 4), ("data", "model"))
     axes = ("data", "model")
 
     # 1) ring_permute moves rank r's value to rank r+1 over the 2-axis ring
     def ring_prog():
         r = flat_rank(axes)
         return ring_permute(r, axes)
-    out = jax.jit(jax.shard_map(lambda: ring_prog()[None], mesh=mesh,
-                                in_specs=(), out_specs=P(axes),
-                                check_vma=False))()
+    out = jax.jit(compat.shard_map(lambda: ring_prog()[None], mesh=mesh,
+                                   in_specs=(), out_specs=P(axes),
+                                   check_vma=False))()
     got = np.asarray(out)
     want = np.roll(np.arange(8), 1)
     assert (got == want).all(), (got, want)
@@ -46,7 +46,8 @@ PROG = textwrap.dedent("""
     for cfg in [SsspConfig(), SsspConfig(exchange="pmin"),
                 SsspConfig(exchange="a2a_dense"),
                 SsspConfig(toka="toka1"),
-                SsspConfig(toka="toka2", local_solver="delta")]:
+                SsspConfig(toka="toka2", local_solver="delta"),
+                SsspConfig(local_solver="pallas")]:
         dist, stats = solve_shmap(sh, 0, cfg, mesh, axes)
         assert np.allclose(dist, ref, 1e-5, 1e-4), cfg
     print("SHMAP OK")
@@ -70,7 +71,7 @@ PROG = textwrap.dedent("""
     rep = jax.NamedSharding(mesh, P())
     params, opt, batch = jax.device_put((params, opt, batch), rep)
     step = jax.jit(tf.make_train_step(cfg, ax, AdamWConfig()))
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         _, _, m = step(params, opt, batch)
     assert np.isfinite(float(m["loss"]))
     print("LM MESH OK")

@@ -2,7 +2,7 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.optim import (AdamWConfig, adamw_init, adamw_update,
                          clip_by_global_norm, cosine_schedule,

@@ -1,6 +1,6 @@
 """1-D block partition invariants (paper §III.A)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.core.partition import partition_1d
 from repro.core.shards import build_shards

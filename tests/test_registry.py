@@ -9,8 +9,8 @@ from repro.distributed.sharding import MeshAxes
 
 @pytest.fixture(scope="module")
 def mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro import compat
+    return compat.make_mesh((1, 1), ("data", "model"))
 
 
 AX = MeshAxes(data=("data",), data_shards=1)

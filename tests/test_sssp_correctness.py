@@ -1,7 +1,7 @@
 """SP-Async vs Dijkstra oracle: property-based + config matrix."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.core import SsspConfig, build_shards, solve_sim
 from repro.graph import (random_graph, road_grid_graph, rmat_graph,
@@ -48,7 +48,7 @@ def test_toka_modes(toka):
     _check(g, 4, SsspConfig(toka=toka))
 
 
-@pytest.mark.parametrize("solver", ["bellman", "delta"])
+@pytest.mark.parametrize("solver", ["bellman", "delta", "pallas"])
 def test_local_solvers(solver):
     g = rmat_graph(scale=7, edge_factor=6, seed=5)
     _check(g, 4, SsspConfig(local_solver=solver, delta=6.0))

@@ -1,6 +1,6 @@
 """Trishla (Algorithm 1) invariants: pruning never changes distances."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.core import SsspConfig, build_shards, solve_sim
 from repro.graph import random_graph, rmat_graph, dijkstra_reference
