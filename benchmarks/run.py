@@ -20,6 +20,7 @@ import sys
 
 _RECORDS: list[dict] = []
 _MTEPS_RE = re.compile(r"mteps=([0-9.]+)")
+_QPS_RE = re.compile(r"qps=([0-9.]+)")
 
 
 def _out(name, us, derived=""):
@@ -28,6 +29,9 @@ def _out(name, us, derived=""):
     m = _MTEPS_RE.search(derived)
     if m:
         rec["mteps"] = float(m.group(1))
+    m = _QPS_RE.search(derived)
+    if m:
+        rec["qps"] = float(m.group(1))
     _RECORDS.append(rec)
 
 

@@ -14,7 +14,7 @@ import time
 
 import numpy as np
 
-from repro.core import SsspConfig, build_shards, solve_sim
+from repro.core import SsspConfig, build_shards, solve_sim, solve_sim_batch
 from repro.graph import rmat_graph, road_grid_graph, dijkstra_reference
 
 BENCH_GRAPHS = {
@@ -118,9 +118,41 @@ def bench_pallas_solver(out):
                 f"rounds={int(stats.rounds)} ok={ok}")
 
 
+def bench_batch_throughput(out):
+    """Query-engine throughput: queries/sec and aggregate MTEPS vs batch
+    size K.
+
+    One ``build_shards``, many sources: the compiled round, the per-round
+    collectives, and (for pallas) the dst-tiled edge layout are shared by
+    the whole batch, so the per-query cost of a round is amortized — the
+    per-source launch/dispatch overhead that dominates single-source runs
+    (the batching argument of the MPI+CUDA Dijkstra study) is paid once
+    per K queries."""
+    for name, build in BENCH_GRAPHS.items():
+        g = build()
+        rng = np.random.default_rng(9)
+        sh = build_shards(g, 8, enumerate_triangles=False)
+        cfg = SsspConfig(prune_online=False)
+        for k in (1, 4, 16):
+            sources = sorted(int(s) for s in
+                             rng.choice(g.n_vertices, size=k, replace=False))
+            solve_sim_batch(sh, sources, cfg)      # warmup + compile
+            ts = []
+            for _ in range(3):
+                t0 = time.perf_counter()
+                _, stats = solve_sim_batch(sh, sources, cfg)
+                ts.append(time.perf_counter() - t0)
+            t = min(ts)
+            mteps = int(stats.relaxations) / t / 1e6
+            out(f"batch_throughput[{name}][K={k}]", t * 1e6,
+                f"qps={k / t:.3f} mteps={mteps:.4f} "
+                f"rounds={int(stats.rounds)}")
+
+
 def run_all(out):
     bench_scaling(out)
     bench_trishla(out)
     bench_toka(out)
     bench_local_solver(out)
     bench_pallas_solver(out)
+    bench_batch_throughput(out)

@@ -1,3 +1,5 @@
-from repro.core.sssp import SsspConfig, SsspStats, solve_sim, solve_shmap, build_shmap_solver
+from repro.core.sssp import (SsspConfig, SsspStats, build_shmap_solver,
+                             solve_shmap, solve_shmap_batch, solve_sim,
+                             solve_sim_batch)
 from repro.core.shards import SsspShards, build_shards
 from repro.core.partition import partition_1d, inter_edge_counts

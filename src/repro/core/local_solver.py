@@ -23,15 +23,22 @@ before communicating) is iterated *frontier-masked relaxation*:
 
 All functions operate on ONE shard's local arrays (no leading P dim); the
 driver vmaps (sim backend) or shard_maps (distributed backend) over shards.
+The driver always presents a leading QUERY axis ``K`` (multi-source
+batching) via ``local_fixpoint_batch``: bellman/delta are vmapped over
+queries (each query runs its own while_loop lanes; jax lifts the loop
+condition to "any query still active"), while the pallas path dispatches
+the natively batched kernel whose grid carries the query axis and reuses
+one edge-layout stream for all K queries.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.relax import relax_fixpoint_pallas
+from repro.kernels.relax import relax_fixpoint_batch_pallas
 
 INF = jnp.float32(jnp.inf)
 
@@ -103,18 +110,31 @@ def local_fixpoint_pallas(dist, active, pruned_loc, relax_layout, *,
     """Fused Pallas fixpoint over the precomputed dst-tiled edge layout.
 
     ``relax_layout`` = (src_t, w_t, dstrel_t, eid_t), each
-    [n_vtiles, n_chunks, EB] for THIS shard. Each kernel invocation runs up
-    to ``sweeps`` frontier-chased sweeps in one ``pallas_call``; the outer
-    ``while_loop`` re-enters only when the residual frontier is non-empty
-    (i.e. roughly every ``sweeps``-th XLA step of the bellman path).
+    [n_vtiles, n_chunks, EB] for THIS shard. A K=1 batch: the batched
+    wrapper owns the padding / pruned-gather / residual-loop logic.
+    """
+    res = local_fixpoint_pallas_batch(dist[None], active[None], pruned_loc,
+                                      relax_layout, vb=vb,
+                                      max_iters=max_iters, sweeps=sweeps,
+                                      interpret=interpret)
+    return LocalResult(dist=res.dist[0], changed=res.changed[0],
+                       relaxations=res.relaxations[0])
+
+
+def local_fixpoint_pallas_batch(dist, active, pruned_loc, relax_layout, *,
+                                vb: int, max_iters: int, sweeps: int = 8,
+                                interpret: bool = True) -> LocalResult:
+    """Batched pallas fixpoint: dist/active are [K, block]; the dst-tiled
+    layout AND the tiled Trishla mask are shared — gathered once, reused by
+    every query in the batch (the amortization the batch engine exists for).
     """
     src_t, w_t, dstrel_t, eid_t = relax_layout
     n_vtiles, _, eb = src_t.shape
-    block = dist.shape[0]
+    nq, block = dist.shape
     bp = n_vtiles * vb
     # pad to the kernel's tile-aligned block; padded slots never win a min
-    dist_pad = jnp.full((bp,), INF).at[:block].set(dist)
-    front_pad = jnp.zeros((bp,), jnp.float32).at[:block].set(
+    dist_pad = jnp.full((nq, bp), INF).at[:, :block].set(dist)
+    front_pad = jnp.zeros((nq, bp), jnp.float32).at[:, :block].set(
         active.astype(jnp.float32))
     # gather the runtime pruned mask into tiled edge order (eid sentinel is
     # out of range -> fill 0 = not pruned, i.e. padding stays inert)
@@ -127,16 +147,48 @@ def local_fixpoint_pallas(dist, active, pruned_loc, relax_layout, *,
 
     def body(c):
         d, front, nrel, it = c
-        new_d, resid, n = relax_fixpoint_pallas(
+        new_d, resid, n = relax_fixpoint_batch_pallas(
             d, front, src_t, w_t, dstrel_t, pruned_t, vb=vb, eb=eb,
             n_sweeps=sweeps, interpret=interpret)
         return new_d, resid, nrel + n, it + jnp.int32(sweeps)
 
     out = jax.lax.while_loop(
-        cond, body, (dist_pad, front_pad, jnp.int32(0), jnp.int32(0)))
-    new_dist = out[0][:block]
-    return LocalResult(dist=new_dist, changed=jnp.any(new_dist < dist),
+        cond, body,
+        (dist_pad, front_pad, jnp.zeros((nq,), jnp.int32), jnp.int32(0)))
+    new_dist = out[0][:, :block]
+    return LocalResult(dist=new_dist,
+                       changed=jnp.any(new_dist < dist, axis=-1),
                        relaxations=out[2])
+
+
+def local_fixpoint_batch(dist, active, loc_src, loc_dst, loc_w, pruned_loc, *,
+                         solver: str = "bellman", max_iters: int = 10_000,
+                         delta: float = 4.0, relax_layout=None,
+                         relax_vb: int = 128, pallas_sweeps: int = 8,
+                         pallas_interpret: bool = True) -> LocalResult:
+    """Multi-query local solve: dist/active carry a leading [K] query axis;
+    the edge arrays and the pruned mask are per-shard (query-invariant).
+    Returns LocalResult with dist [K, block], changed [K], relaxations [K].
+    """
+    if solver == "pallas" and relax_layout is None:
+        solver = "bellman"   # no dst-tiled layout carried by the shards
+    if solver == "bellman":
+        return jax.vmap(partial(local_fixpoint_bellman, loc_src=loc_src,
+                                loc_dst=loc_dst, loc_w=loc_w,
+                                pruned_loc=pruned_loc,
+                                max_iters=max_iters))(dist, active)
+    if solver == "delta":
+        return jax.vmap(partial(local_fixpoint_delta, loc_src=loc_src,
+                                loc_dst=loc_dst, loc_w=loc_w,
+                                pruned_loc=pruned_loc, max_iters=max_iters,
+                                delta=delta))(dist, active)
+    if solver == "pallas":
+        return local_fixpoint_pallas_batch(dist, active, pruned_loc,
+                                           relax_layout, vb=relax_vb,
+                                           max_iters=max_iters,
+                                           sweeps=pallas_sweeps,
+                                           interpret=pallas_interpret)
+    raise ValueError(f"unknown local solver {solver!r}")
 
 
 def local_fixpoint(dist, active, loc_src, loc_dst, loc_w, pruned_loc, *,
@@ -144,17 +196,12 @@ def local_fixpoint(dist, active, loc_src, loc_dst, loc_w, pruned_loc, *,
                    delta: float = 4.0, relax_layout=None, relax_vb: int = 128,
                    pallas_sweeps: int = 8,
                    pallas_interpret: bool = True) -> LocalResult:
-    if solver == "pallas" and relax_layout is None:
-        solver = "bellman"   # no dst-tiled layout carried by the shards
-    if solver == "bellman":
-        return local_fixpoint_bellman(dist, active, loc_src, loc_dst, loc_w,
-                                      pruned_loc, max_iters)
-    if solver == "delta":
-        return local_fixpoint_delta(dist, active, loc_src, loc_dst, loc_w,
-                                    pruned_loc, max_iters, delta)
-    if solver == "pallas":
-        return local_fixpoint_pallas(dist, active, pruned_loc, relax_layout,
-                                     vb=relax_vb, max_iters=max_iters,
-                                     sweeps=pallas_sweeps,
-                                     interpret=pallas_interpret)
-    raise ValueError(f"unknown local solver {solver!r}")
+    """Single-query local solve: a K=1 batch (the batched entry point owns
+    the solver dispatch and the pallas-layout fallback rule)."""
+    res = local_fixpoint_batch(
+        dist[None], active[None], loc_src, loc_dst, loc_w, pruned_loc,
+        solver=solver, max_iters=max_iters, delta=delta,
+        relax_layout=relax_layout, relax_vb=relax_vb,
+        pallas_sweeps=pallas_sweeps, pallas_interpret=pallas_interpret)
+    return LocalResult(dist=res.dist[0], changed=res.changed[0],
+                       relaxations=res.relaxations[0])

@@ -102,7 +102,7 @@ class SsspShards:
 
     @property
     def relax_layout(self):
-        """Per-call tuple consumed by ``local_fixpoint`` (or None)."""
+        """Per-call tuple consumed by ``local_fixpoint_batch`` (or None)."""
         if self.rx_src is None:
             return None
         return (self.rx_src, self.rx_w, self.rx_dstrel, self.rx_eid)

@@ -1,21 +1,34 @@
-"""SP-Async driver (paper Algorithm 2).
+"""SP-Async driver (paper Algorithm 2), batched over a query axis.
+
+The paper solves ONE source per run; this driver is a multi-source *query
+engine*: every solve takes K sources at once against the same partitioned
+graph, so the one-time preprocessing (partitioning, message routing,
+Trishla triangle enumeration, the dst-tiled Pallas edge layout) is
+amortized across the whole batch. Single-source entry points are thin
+K=1 wrappers.
 
 Round structure (one outer round = one inter-partition Bellman-Ford step):
 
-  1. *Local phase* — every shard with a non-empty frontier runs its local
-     solver to a fixpoint (the paper's intra-node Dijkstra). Idle shards
-     take the other branch of a ``lax.cond`` and evaluate a chunk of
-     Trishla triangle candidates instead (the paper's "idle processes do
-     edge elimination").
+  1. *Local phase* — every shard with a non-empty frontier (in ANY live
+     query) runs its local solver to a fixpoint for all K queries at once
+     (the paper's intra-node Dijkstra, batched). Idle shards take the other
+     branch of a ``lax.cond`` and evaluate a chunk of Trishla triangle
+     candidates instead (the paper's "idle processes do edge elimination";
+     pruning is query-invariant, so it is shared by the batch).
   2. *Send phase* — candidate distances over cut edges are pre-aggregated
-     per boundary vertex (segment-min) and placed into a statically-routed
-     send buffer; only improvements over ``last_sent`` are transmitted.
-  3. *Exchange* — one collective: bucketed ``all_to_all`` (default), dense
-     ``all_reduce(min)`` (``pmin``), or dense ``all_to_all`` + local min
-     (``a2a_dense``).
+     per boundary vertex (segment-min, per query) and placed into a
+     statically-routed ``[K, P, C]`` send buffer; only improvements over
+     ``last_sent`` are transmitted.
+  3. *Exchange* — ONE collective moves the whole batch: bucketed
+     ``all_to_all`` (default), dense ``all_reduce(min)`` (``pmin``), or
+     dense ``all_to_all`` + local min (``a2a_dense``). The K payloads ride
+     in the same transfer — batching multiplies payload bytes, not message
+     count or latency terms.
   4. *Merge phase* — incoming messages scatter-min into the local distance
-     block; improved vertices form the next frontier.
-  5. *ToKa* — termination detection (see ``core/toka.py``).
+     block per query; improved vertices form the next frontier.
+  5. *ToKa* — termination detection (see ``core/toka.py``), PER QUERY: a
+     converged-query mask keeps finished queries from relaxing or sending
+     while stragglers run; the round loop exits only when all K are done.
 
 Backends:
   - ``sim``: the same phases vmapped over a stacked [P, ...] representation
@@ -25,12 +38,17 @@ Backends:
     ``lax.while_loop`` *inside* the shard_map body so the whole solve is a
     single compiled program with collectives on the wire. This is the path
     the multi-pod dry-run lowers.
+
+Per-shard state layout: ``dist``/``active`` are [K, block], ``last_sent``
+is [K, S]; the Trishla ``pruned`` mask and triangle cursor carry no query
+axis (edge pruning is a property of the graph, not of the source).
 """
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from functools import partial
-from typing import Any, NamedTuple
+from typing import Any, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +58,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core import toka as toka_mod
-from repro.core.local_solver import local_fixpoint
+from repro.core.local_solver import local_fixpoint_batch
 from repro.core.shards import SsspShards
 from repro.core import trishla
 from repro.distributed.collectives import (
@@ -66,26 +84,29 @@ class SsspConfig:
 
 
 class SsspStats(NamedTuple):
-    rounds: jax.Array
+    rounds: jax.Array        # outer rounds until the LAST query converged
     relaxations: jax.Array   # total edge relaxations (TEPS numerator)
     msgs_sent: jax.Array
     msgs_recv: jax.Array
     pruned_edges: jax.Array
+    q_rounds: jax.Array = None        # [K] rounds each query was live
+    q_relaxations: jax.Array = None   # [K] edge relaxations per query
 
 
 class _Carry(NamedTuple):
-    dist: Any
-    active: Any
-    pruned: Any
+    dist: Any         # [K, block] per shard
+    active: Any       # [K, block] per shard
+    pruned: Any       # [e_all] per shard (query-invariant)
     tri_cursor: Any
-    last_sent: Any
-    msg_count: Any
-    toka2: Any
-    done: Any
+    last_sent: Any    # [K, S] per shard
+    msg_count: Any    # [K] per shard
+    toka2: Any        # Toka2State with [K]-leading fields
+    done: Any         # [K] converged-query mask (globally agreed)
     rounds: Any
-    relaxations: Any
-    msgs_sent: Any
-    msgs_recv: Any
+    q_rounds: Any     # [K]
+    relaxations: Any  # [K]
+    msgs_sent: Any    # [K]
+    msgs_recv: Any    # [K]
 
 
 # --------------------------------------------------------------------------
@@ -93,12 +114,16 @@ class _Carry(NamedTuple):
 # --------------------------------------------------------------------------
 
 def _phase_local(shard: SsspShards, dist, active, pruned, cursor, cfg: SsspConfig):
-    """Local solve (frontier non-empty) or Trishla chunk (idle)."""
+    """Batched local solve (any frontier non-empty) or Trishla chunk (idle).
+
+    ``dist``/``active``: [K, block]. The pruned mask and cursor are shared
+    across the batch."""
     e_loc = shard.loc_src.shape[0]
+    nq = dist.shape[0]
     idle = ~jnp.any(active)
 
     def solve(dist, pruned, cursor):
-        res = local_fixpoint(
+        res = local_fixpoint_batch(
             dist, active, shard.loc_src, shard.loc_dst, shard.loc_w,
             pruned[:e_loc], solver=cfg.local_solver,
             max_iters=cfg.local_iters, delta=cfg.delta,
@@ -108,52 +133,64 @@ def _phase_local(shard: SsspShards, dist, active, pruned, cursor, cfg: SsspConfi
         return res.dist, pruned, cursor, res.relaxations, jnp.int32(0)
 
     def prune(dist, pruned, cursor):
+        nrel0 = jnp.zeros((nq,), jnp.int32)
         if not cfg.prune_online:
-            return dist, pruned, cursor, jnp.int32(0), jnp.int32(0)
+            return dist, pruned, cursor, nrel0, jnp.int32(0)
         w_all = jnp.concatenate([shard.loc_w, shard.cut_w])
         new_pruned, new_cursor, n = trishla.prune_chunk(
             w_all, pruned, cursor, shard.tri_uj, shard.tri_ui, shard.tri_ij,
             shard.tri_valid, cfg.tri_chunk)
-        return dist, new_pruned, new_cursor, jnp.int32(0), n
+        return dist, new_pruned, new_cursor, nrel0, n
 
     return lax.cond(idle, prune, solve, dist, pruned, cursor)
 
 
 def _phase_send(shard: SsspShards, dist, pruned, last_sent, cfg: SsspConfig):
-    """Build the outgoing payload. Returns (payload, last_sent', sends)."""
+    """Build the outgoing payload for all K queries.
+
+    Returns (payload [K, P, C] (bucket) or [K, P, block] (dense),
+    last_sent' [K, S], sends [K])."""
     e_loc = shard.loc_src.shape[0]
     S = shard.slot_owner.shape[0]
     Pn, C = shard.recv_idx.shape[0], shard.recv_idx.shape[1]
 
-    w_cut = jnp.where(pruned[e_loc:], INF, shard.cut_w)
-    d_src = jnp.take(dist, shard.cut_src, mode="fill", fill_value=float("inf"))
+    w_cut = jnp.where(pruned[e_loc:], INF, shard.cut_w)            # [e_cut]
+    d_src = jnp.take(dist, shard.cut_src, axis=1, mode="fill",
+                     fill_value=float("inf"))                      # [K, e_cut]
     cand = d_src + w_cut
-    slot_val = jax.ops.segment_min(cand, shard.cut_seg, num_segments=S,
-                                   indices_are_sorted=True)
-    improved = shard.slot_valid & (slot_val < last_sent)
+    slot_val = jax.vmap(lambda c: jax.ops.segment_min(
+        c, shard.cut_seg, num_segments=S, indices_are_sorted=True))(cand)
+    improved = shard.slot_valid & (slot_val < last_sent)           # [K, S]
     send_val = jnp.where(improved, slot_val, INF)
     new_last = jnp.where(improved, slot_val, last_sent)
-    sends = jnp.sum(improved).astype(jnp.int32)
+    sends = jnp.sum(improved, axis=-1).astype(jnp.int32)           # [K]
 
     if cfg.exchange == "bucket":
-        payload = jnp.full((Pn, C), INF, jnp.float32)
-        payload = payload.at[shard.slot_owner, shard.slot_pos].min(send_val)
+        scatter = jax.vmap(
+            lambda v: jnp.full((Pn, C), INF, jnp.float32)
+            .at[shard.slot_owner, shard.slot_pos].min(v))
     else:  # dense candidate vector addressed by (owner, dst_local)
-        payload = jnp.full((Pn, dist.shape[0]), INF, jnp.float32)
-        payload = payload.at[shard.slot_owner, shard.slot_dstl].min(send_val)
-    return payload, new_last, sends
+        blk = dist.shape[1]
+        scatter = jax.vmap(
+            lambda v: jnp.full((Pn, blk), INF, jnp.float32)
+            .at[shard.slot_owner, shard.slot_dstl].min(v))
+    return scatter(send_val), new_last, sends
 
 
 def _phase_merge(shard: SsspShards, dist, incoming, cfg: SsspConfig):
-    """Scatter-min incoming messages into the local block."""
+    """Scatter-min incoming messages into the local block, per query.
+
+    ``incoming``: [K, P, C] (bucket) or [K, block] (dense)."""
+    nq = dist.shape[0]
     if cfg.exchange == "bucket":
-        flat_val = incoming.reshape(-1)
+        flat_val = incoming.reshape(nq, -1)
         flat_idx = shard.recv_idx.reshape(-1)   # sentinel = block -> dropped
-        new = dist.at[flat_idx].min(flat_val, mode="drop")
-        recvs = jnp.sum(jnp.isfinite(flat_val)).astype(jnp.int32)
+        new = jax.vmap(
+            lambda d, v: d.at[flat_idx].min(v, mode="drop"))(dist, flat_val)
+        recvs = jnp.sum(jnp.isfinite(flat_val), axis=-1).astype(jnp.int32)
     else:
         new = jnp.minimum(dist, incoming)
-        recvs = jnp.sum(incoming < dist).astype(jnp.int32)
+        recvs = jnp.sum(incoming < dist, axis=-1).astype(jnp.int32)
     new_active = new < dist
     return new, new_active, recvs
 
@@ -163,7 +200,11 @@ def _phase_merge(shard: SsspShards, dist, incoming, cfg: SsspConfig):
 # --------------------------------------------------------------------------
 
 class ShmapComm:
-    """Collectives inside a shard_map body (axis_names = flattened ring)."""
+    """Collectives inside a shard_map body (axis_names = flattened ring).
+
+    Payloads carry a leading query axis [K, P, ...]; each exchange is still
+    ONE collective — the batch is moved by transposing the query axis in,
+    not by issuing K transfers."""
 
     def __init__(self, axis_names):
         self.axes = tuple(axis_names)
@@ -173,14 +214,15 @@ class ShmapComm:
 
     def exchange(self, payload, cfg: SsspConfig):
         if cfg.exchange == "bucket":
-            return all_to_all_tiled(payload, self.axes)          # [P, C]
+            recv = all_to_all_tiled(jnp.swapaxes(payload, 0, 1), self.axes)
+            return jnp.swapaxes(recv, 0, 1)                      # [K, P, C]
         if cfg.exchange == "pmin":
-            merged = lax.pmin(payload, self.axes)                # [P, block]
-            return lax.dynamic_index_in_dim(merged, self.rank(), 0,
-                                            keepdims=False)
+            merged = lax.pmin(payload, self.axes)                # [K, P, block]
+            return lax.dynamic_index_in_dim(merged, self.rank(), 1,
+                                            keepdims=False)      # [K, block]
         if cfg.exchange == "a2a_dense":
-            recv = all_to_all_tiled(payload, self.axes)          # [P, block]
-            return jnp.min(recv, axis=0)
+            recv = all_to_all_tiled(jnp.swapaxes(payload, 0, 1), self.axes)
+            return jnp.min(recv, axis=0)                         # [K, block]
         raise ValueError(cfg.exchange)
 
     def ring(self, tok):
@@ -197,7 +239,10 @@ class ShmapComm:
 
 
 class SimComm:
-    """Same contracts on stacked [P, ...] arrays (single-device simulator)."""
+    """Same contracts on stacked [P, ...] arrays (single-device simulator).
+
+    Reductions act over the shard axis (axis 0) only, leaving the query
+    axis intact: flags are [P, K], payloads [P_src, K, P_dst, ...]."""
 
     def __init__(self, n_parts: int):
         self.P = n_parts
@@ -206,20 +251,20 @@ class SimComm:
         return jnp.arange(self.P, dtype=jnp.int32)
 
     def exchange(self, payload, cfg: SsspConfig):
-        # payload: [P_src, P_dst, *] stacked over senders
+        # payload: [P_src, K, P_dst, *] stacked over senders
         if cfg.exchange == "bucket":
-            return jnp.swapaxes(payload, 0, 1)                    # [P_dst, P_src, C]
-        # dense: [P_src, P_owner, block] -> per-owner min over senders
-        return jnp.min(payload, axis=0)                           # [P_owner, block]
+            return jnp.swapaxes(payload, 0, 2)            # [P_dst, K, P_src, C]
+        # dense: [P_src, K, P_owner, block] -> per-owner min over senders
+        return jnp.swapaxes(jnp.min(payload, axis=0), 0, 1)  # [P_owner, K, block]
 
     def ring(self, tok):
         return jax.tree_util.tree_map(lambda x: jnp.roll(x, 1, axis=0), tok)
 
     def all_any(self, flag):
-        return jnp.broadcast_to(jnp.any(flag), flag.shape)
+        return jnp.broadcast_to(jnp.any(flag, axis=0), flag.shape)
 
     def all_all(self, flag):
-        return jnp.broadcast_to(jnp.all(flag), flag.shape)
+        return jnp.broadcast_to(jnp.all(flag, axis=0), flag.shape)
 
     def total(self, x):
         return jnp.broadcast_to(jnp.sum(x, axis=0), x.shape)
@@ -229,14 +274,26 @@ class SimComm:
 # round + termination (shared logic, comm-parameterized)
 # --------------------------------------------------------------------------
 
+def _vcall(fn, vmapped, *args, in_axes=0):
+    """vmap ``fn`` over the query axis (always) and the shard axis (sim)."""
+    f = jax.vmap(fn, in_axes=in_axes)
+    if vmapped:
+        f = jax.vmap(f)
+    return f(*args)
+
+
 def _toka_done(cfg, comm, carry, new_active, sends, recvs, inter_edges, n_parts,
                rank, vmapped: bool):
-    idle = ~_vany(new_active, vmapped)
+    """Per-query termination: every detector runs K independent instances
+    (toka2 circulates K tokens in the same ring hop). Returns ([K] done
+    mask, toka2')."""
+    idle = ~jnp.any(new_active, axis=-1)            # [K] (or [P, K] in sim)
     quiescent = comm.all_all(idle)
     if cfg.toka == "toka0":
         return quiescent, carry.toka2
     if cfg.toka == "toka1":
-        vote = toka_mod.toka1_vote(carry.msg_count + recvs, inter_edges, n_parts)
+        ie = inter_edges[:, None] if vmapped else inter_edges
+        vote = toka_mod.toka1_vote(carry.msg_count + recvs, ie, n_parts)
         return quiescent | comm.all_all(vote), carry.toka2
     if cfg.toka == "toka2":
         # Safra's counter invariant (sum of sent-received returns to 0)
@@ -257,19 +314,11 @@ def _toka_done(cfg, comm, carry, new_active, sends, recvs, inter_edges, n_parts,
             color = jnp.where(sends > 0, jnp.int32(1), acct.color)
             acct = acct._replace(color=color)
         st, outgoing = _vcall(partial(toka_mod.toka2_forward, n_parts=n_parts),
-                              vmapped, acct, rank, idle)
+                              vmapped, acct, rank, idle, in_axes=(0, None, 0))
         incoming = comm.ring(outgoing)
         st = _vcall(toka_mod.toka2_absorb, vmapped, st, incoming)
         return comm.all_all(st.seen_red), st
     raise ValueError(cfg.toka)
-
-
-def _vany(x, vmapped):
-    return jnp.any(x, axis=-1) if not vmapped else jnp.any(x, axis=tuple(range(1, x.ndim)))
-
-
-def _vcall(fn, vmapped, *args):
-    return jax.vmap(fn)(*args) if vmapped else fn(*args)
 
 
 def _make_round(shard_or_stack: SsspShards, cfg: SsspConfig, comm, vmapped: bool,
@@ -290,17 +339,22 @@ def _make_round(shard_or_stack: SsspShards, cfg: SsspConfig, comm, vmapped: bool
         merge_f = jax.vmap(merge_f)
 
     def rounds_fn(carry: _Carry) -> _Carry:
+        # converged-query mask: finished queries stop relaxing and sending
+        # while stragglers run (their frontier is forced empty)
+        act = carry.active & ~carry.done[..., None]
         dist, pruned, cursor, nrel, nprune = local_f(
-            sh, carry.dist, carry.active, carry.pruned, carry.tri_cursor)
+            sh, carry.dist, act, carry.pruned, carry.tri_cursor)
         payload, last_sent, sends = send_f(sh, dist, pruned, carry.last_sent)
         incoming = comm.exchange(payload, cfg)
         dist, new_active, recvs = merge_f(sh, dist, incoming)
         done, toka2 = _toka_done(cfg, comm, carry, new_active, sends, recvs,
                                  sh.inter_edges, n_parts, comm.rank(), vmapped)
+        running = (~carry.done).astype(jnp.int32)
         return _Carry(
             dist=dist, active=new_active, pruned=pruned, tri_cursor=cursor,
             last_sent=last_sent, msg_count=carry.msg_count + recvs,
-            toka2=toka2, done=done, rounds=carry.rounds + 1,
+            toka2=toka2, done=carry.done | done, rounds=carry.rounds + 1,
+            q_rounds=carry.q_rounds + running,
             relaxations=carry.relaxations + nrel.astype(jnp.int32),
             msgs_sent=carry.msgs_sent + sends.astype(jnp.int32),
             msgs_recv=carry.msgs_recv + recvs.astype(jnp.int32))
@@ -308,37 +362,50 @@ def _make_round(shard_or_stack: SsspShards, cfg: SsspConfig, comm, vmapped: bool
     return rounds_fn
 
 
-def _init_carry(sh: SsspShards, source: int, cfg: SsspConfig, rank, vmapped: bool):
-    """Stacked init (sim) or per-shard init (shard_map)."""
+def _toka2_init_batch(rank, nq: int):
+    """K independent token-ring states (shard 0 holds all K tokens)."""
+    st = toka_mod.toka2_init(rank)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (nq,) + jnp.shape(x)), st)
+
+
+def _init_carry(sh: SsspShards, sources: Sequence[int], cfg: SsspConfig, rank,
+                vmapped: bool):
+    """Stacked init (sim) or per-shard init (shard_map) for K sources."""
     block = sh.block
     n_parts = sh.n_parts
-    src_owner = source // block
-    src_local = source % block
+    sources = tuple(int(s) for s in sources)
+    nq = len(sources)
 
     if vmapped:
         Pn = n_parts
-        dist = jnp.full((Pn, block), INF, jnp.float32)
-        dist = dist.at[src_owner, src_local].set(0.0)
-        active = jnp.zeros((Pn, block), bool).at[src_owner, src_local].set(True)
+        dist = jnp.full((Pn, nq, block), INF, jnp.float32)
+        active = jnp.zeros((Pn, nq, block), bool)
+        for k, s in enumerate(sources):
+            dist = dist.at[s // block, k, s % block].set(0.0)
+            active = active.at[s // block, k, s % block].set(True)
         e_all = sh.loc_w.shape[1] + sh.cut_w.shape[1]
         pruned = jnp.zeros((Pn, e_all), bool)
-        last_sent = jnp.full((Pn, sh.slot_owner.shape[1]), INF, jnp.float32)
-        zero = jnp.zeros((Pn,), jnp.int32)
-        zero32 = jnp.zeros((Pn,), jnp.int32)
-        toka2 = jax.vmap(toka_mod.toka2_init)(jnp.arange(Pn, dtype=jnp.int32))
-        done = jnp.zeros((), bool)
+        last_sent = jnp.full((Pn, nq, sh.slot_owner.shape[1]), INF, jnp.float32)
+        cursor = jnp.zeros((Pn,), jnp.int32)
+        zeroq = jnp.zeros((Pn, nq), jnp.int32)
+        toka2 = jax.vmap(lambda r: _toka2_init_batch(r, nq))(
+            jnp.arange(Pn, dtype=jnp.int32))
+        done = jnp.zeros((Pn, nq), bool)
     else:
-        dist = jnp.full((block,), INF, jnp.float32)
-        mine = rank == src_owner
-        dist = dist.at[src_local].set(jnp.where(mine, 0.0, INF))
-        active = jnp.zeros((block,), bool).at[src_local].set(mine)
+        dist = jnp.full((nq, block), INF, jnp.float32)
+        active = jnp.zeros((nq, block), bool)
+        for k, s in enumerate(sources):
+            mine = rank == s // block
+            dist = dist.at[k, s % block].set(jnp.where(mine, 0.0, INF))
+            active = active.at[k, s % block].set(mine)
         e_all = sh.loc_w.shape[0] + sh.cut_w.shape[0]
         pruned = jnp.zeros((e_all,), bool)
-        last_sent = jnp.full((sh.slot_owner.shape[0],), INF, jnp.float32)
-        zero = jnp.zeros((), jnp.int32)
-        zero32 = jnp.zeros((), jnp.int32)
-        toka2 = toka_mod.toka2_init(rank)
-        done = jnp.zeros((), bool)
+        last_sent = jnp.full((nq, sh.slot_owner.shape[0]), INF, jnp.float32)
+        cursor = jnp.zeros((), jnp.int32)
+        zeroq = jnp.zeros((nq,), jnp.int32)
+        toka2 = _toka2_init_batch(rank, nq)
+        done = jnp.zeros((nq,), bool)
 
     if cfg.prune_offline_passes > 0:
         off = partial(trishla.prune_offline, n_passes=cfg.prune_offline_passes)
@@ -349,79 +416,146 @@ def _init_carry(sh: SsspShards, source: int, cfg: SsspConfig, rank, vmapped: boo
             pruned = off(sh.loc_w, sh.cut_w, sh.tri_uj, sh.tri_ui, sh.tri_ij,
                          sh.tri_valid)
 
-    return _Carry(dist=dist, active=active, pruned=pruned, tri_cursor=zero,
-                  last_sent=last_sent, msg_count=zero, toka2=toka2, done=done,
-                  rounds=jnp.zeros((), jnp.int32),
-                  relaxations=zero32, msgs_sent=zero32, msgs_recv=zero32)
+    return _Carry(dist=dist, active=active, pruned=pruned, tri_cursor=cursor,
+                  last_sent=last_sent, msg_count=zeroq, toka2=toka2, done=done,
+                  rounds=jnp.zeros((), jnp.int32), q_rounds=zeroq,
+                  relaxations=zeroq, msgs_sent=zeroq, msgs_recv=zeroq)
 
 
 # --------------------------------------------------------------------------
 # public entry points
 # --------------------------------------------------------------------------
 
-def solve_sim(sh: SsspShards, source: int, cfg: SsspConfig = SsspConfig()):
-    """Single-device simulator: python outer loop, jitted round."""
+def _as_sources(source_or_sources, n_vertices: int | None = None) -> tuple[int, ...]:
+    if isinstance(source_or_sources, (int, np.integer)):
+        sources = (int(source_or_sources),)
+    else:
+        sources = tuple(int(s) for s in source_or_sources)
+    if n_vertices is not None:
+        for s in sources:
+            # an out-of-range id would be silently dropped by the init
+            # scatter (all-INF result) or land on a padding vertex
+            if not 0 <= s < n_vertices:
+                raise ValueError(
+                    f"source {s} out of range [0, {n_vertices})")
+    return sources
+
+
+# One compiled round per (shards object, config): a query engine answers
+# many batches against the same partitioned graph, and retracing the round
+# per solve would re-pay compilation on every request — the exact per-query
+# launch overhead batching exists to amortize. Entries are validated by
+# weakref identity (a recycled id() from a dead shards object cannot alias)
+# and the cache is bounded.
+_SIM_ROUND_CACHE: dict = {}
+_SIM_ROUND_CACHE_MAX = 32
+
+
+def _sim_round(sh: SsspShards, cfg: SsspConfig):
+    key = (id(sh), cfg)
+    ent = _SIM_ROUND_CACHE.get(key)
+    if ent is not None and ent[0]() is sh:
+        return ent[1]
     comm = SimComm(sh.n_parts)
-    round_fn = jax.jit(_make_round(sh, cfg, comm, vmapped=True,
-                                   n_parts=sh.n_parts))
-    carry = _init_carry(sh, source, cfg, rank=None, vmapped=True)
+    fn = jax.jit(_make_round(sh, cfg, comm, vmapped=True, n_parts=sh.n_parts))
+    if len(_SIM_ROUND_CACHE) >= _SIM_ROUND_CACHE_MAX:
+        _SIM_ROUND_CACHE.pop(next(iter(_SIM_ROUND_CACHE)))
+    _SIM_ROUND_CACHE[key] = (weakref.ref(sh), fn)
+    return fn
+
+
+def solve_sim_batch(sh: SsspShards, sources: Sequence[int],
+                    cfg: SsspConfig = SsspConfig()):
+    """Single-device simulator, K sources: python outer loop, jitted round.
+
+    Returns (dist [K, n_vertices], SsspStats with per-query q_rounds /
+    q_relaxations [K])."""
+    sources = _as_sources(sources, sh.n_vertices)
+    nq = len(sources)
+    round_fn = _sim_round(sh, cfg)
+    carry = _init_carry(sh, sources, cfg, rank=None, vmapped=True)
     r = 0
     while r < cfg.max_rounds:
         carry = round_fn(carry)
         r += 1
-        if bool(carry.done if carry.done.ndim == 0 else carry.done.all()):
+        if bool(np.asarray(carry.done).all()):
             break
-    dist = np.asarray(carry.dist).reshape(-1)[: sh.n_vertices]
+    # [P, K, block] -> per-query global distance vectors
+    dist = np.moveaxis(np.asarray(carry.dist), 0, 1)
+    dist = dist.reshape(nq, -1)[:, : sh.n_vertices]
     stats = SsspStats(
-        rounds=jnp.int32(r),
+        rounds=carry.rounds,
         relaxations=jnp.sum(carry.relaxations),
         msgs_sent=jnp.sum(carry.msgs_sent),
         msgs_recv=jnp.sum(carry.msgs_recv),
-        pruned_edges=jnp.sum(carry.pruned))
+        pruned_edges=jnp.sum(carry.pruned),
+        q_rounds=jnp.max(carry.q_rounds, axis=0),
+        q_relaxations=jnp.sum(carry.relaxations, axis=0))
     return dist, stats
 
 
-def build_shmap_solver(sh_spec: SsspShards, cfg: SsspConfig, mesh,
-                       axis_names, source: int):
-    """Returns a jittable fn(shards_stacked) -> (dist [P, block], stats).
+def solve_sim(sh: SsspShards, source: int, cfg: SsspConfig = SsspConfig()):
+    """Single-source wrapper: a K=1 batch."""
+    dist, stats = solve_sim_batch(sh, (int(source),), cfg)
+    return dist[0], stats
 
-    The outer round loop is a lax.while_loop inside the shard_map body; the
-    whole solve compiles to one XLA program (this is what the dry-run
-    lowers for the production meshes).
+
+def build_shmap_solver(sh_spec: SsspShards, cfg: SsspConfig, mesh,
+                       axis_names, source):
+    """Returns a jittable fn(shards_stacked) -> (dist [P, K, block], stats).
+
+    ``source`` is an int or a sequence of ints (the query batch). The outer
+    round loop is a lax.while_loop inside the shard_map body; the whole
+    solve compiles to one XLA program (this is what the dry-run lowers for
+    the production meshes).
     """
     axes = tuple(axis_names)
     n_parts = sh_spec.n_parts
+    sources = _as_sources(source, sh_spec.n_vertices)
     comm = ShmapComm(axes)
 
     def body(sh_local: SsspShards):
         sh1 = jax.tree_util.tree_map(lambda x: x[0], sh_local)  # strip P dim
         # recv_idx arrives as [1, P, C] -> [P, C]; inter_edges scalar
         rank = comm.rank()
-        carry = _init_carry(sh1, source, cfg, rank=rank, vmapped=False)
+        carry = _init_carry(sh1, sources, cfg, rank=rank, vmapped=False)
         round_fn = _make_round(sh1, cfg, comm, vmapped=False, n_parts=n_parts)
 
         def cond(c: _Carry):
-            return (~c.done) & (c.rounds < cfg.max_rounds)
+            return (~jnp.all(c.done)) & (c.rounds < cfg.max_rounds)
 
         carry = lax.while_loop(cond, round_fn, carry)
         stats = SsspStats(
             rounds=carry.rounds,
-            relaxations=comm.total(carry.relaxations),
-            msgs_sent=comm.total(carry.msgs_sent),
-            msgs_recv=comm.total(carry.msgs_recv),
-            pruned_edges=comm.total(jnp.sum(carry.pruned).astype(jnp.int32)))
+            relaxations=comm.total(jnp.sum(carry.relaxations)),
+            msgs_sent=comm.total(jnp.sum(carry.msgs_sent)),
+            msgs_recv=comm.total(jnp.sum(carry.msgs_recv)),
+            pruned_edges=comm.total(jnp.sum(carry.pruned).astype(jnp.int32)),
+            q_rounds=carry.q_rounds,
+            q_relaxations=comm.total(carry.relaxations))
         return carry.dist[None], stats  # restore leading P dim
 
     pspec = P(axes)
     rspec = P()
     in_specs = jax.tree_util.tree_map(lambda _: pspec, sh_spec)
-    out_specs = (pspec, SsspStats(rspec, rspec, rspec, rspec, rspec))
+    out_specs = (pspec, SsspStats(rspec, rspec, rspec, rspec, rspec,
+                                  rspec, rspec))
     return jax.jit(compat.shard_map(body, mesh=mesh, in_specs=(in_specs,),
                                     out_specs=out_specs, check_vma=False))
 
 
-def solve_shmap(sh: SsspShards, source: int, cfg: SsspConfig, mesh, axis_names):
-    solver = build_shmap_solver(sh, cfg, mesh, axis_names, source)
+def solve_shmap_batch(sh: SsspShards, sources: Sequence[int], cfg: SsspConfig,
+                      mesh, axis_names):
+    """shard_map backend, K sources. Returns (dist [K, n_vertices], stats)."""
+    sources = _as_sources(sources)
+    solver = build_shmap_solver(sh, cfg, mesh, axis_names, sources)
     dist, stats = solver(sh)
-    dist = np.asarray(dist).reshape(-1)[: sh.n_vertices]
+    dist = np.moveaxis(np.asarray(dist), 0, 1)          # [K, P, block]
+    dist = dist.reshape(len(sources), -1)[:, : sh.n_vertices]
     return dist, stats
+
+
+def solve_shmap(sh: SsspShards, source: int, cfg: SsspConfig, mesh, axis_names):
+    """Single-source wrapper: a K=1 batch."""
+    dist, stats = solve_shmap_batch(sh, (int(source),), cfg, mesh, axis_names)
+    return dist[0], stats

@@ -8,7 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.relax.relax import (
-    relax_dst_tiled, relax_dst_tiled_fixpoint, relax_dst_tiled_masked,
+    relax_dst_tiled, relax_dst_tiled_fixpoint, relax_dst_tiled_fixpoint_batch,
+    relax_dst_tiled_masked,
 )
 
 
@@ -90,6 +91,19 @@ def relax_fixpoint_pallas(dist_pad, front_pad, src_t, w_t, dstrel_t, pruned_t,
         dist_pad, front_pad, src_t, w_t, dstrel_t, pruned_t, vb=vb, eb=eb,
         n_sweeps=n_sweeps, interpret=interpret)
     return new, resid, nrel[0]
+
+
+@partial(jax.jit, static_argnames=("vb", "eb", "n_sweeps", "interpret"))
+def relax_fixpoint_batch_pallas(dist_pad, front_pad, src_t, w_t, dstrel_t,
+                                pruned_t, *, vb: int = 128, eb: int = 512,
+                                n_sweeps: int = 8, interpret: bool = True):
+    """Batched fused solve over a leading query axis K (shared edge layout).
+
+    dist_pad/front_pad: [K, block_pad]. Returns (new_dist [K, block_pad],
+    residual_frontier [K, block_pad], n_relax [K])."""
+    return relax_dst_tiled_fixpoint_batch(
+        dist_pad, front_pad, src_t, w_t, dstrel_t, pruned_t, vb=vb, eb=eb,
+        n_sweeps=n_sweeps, interpret=interpret)
 
 
 @jax.jit

@@ -9,7 +9,7 @@ VMEM. The source-distance gather is a 1-D dynamic gather from the
 VMEM-resident distance vector (Mosaic ``DynamicGatherOp``; validated here
 in interpret mode since the container is CPU-only).
 
-Three entry points, in increasing integration with the solver:
+Four entry points, in increasing integration with the solver:
 
 - ``relax_dst_tiled``: one unmasked sweep (the original micro-benchmark
   kernel). Grid ``(n_vtiles, n_chunks)``.
@@ -20,6 +20,15 @@ Three entry points, in increasing integration with the solver:
 - ``relax_dst_tiled_fixpoint``: the fused local solve — the whole
   frontier-chased fixpoint runs inside ONE ``pallas_call`` with grid
   ``(n_sweeps, n_vtiles, n_chunks)`` instead of re-entering XLA per sweep.
+- ``relax_dst_tiled_fixpoint_batch``: the fixpoint over a leading query
+  axis ``K`` (multi-source SSSP). Grid ``(n_sweeps, n_vtiles, n_chunks,
+  K)`` with the query axis INNERMOST: the edge-chunk block index map
+  depends only on ``(i, j)``, so one fetched chunk is reused by all K
+  queries before the next chunk streams in — the dst-tiled layout is
+  amortized across the whole batch. Distances/frontiers are per-query
+  ``[K, block_pad]`` rows; the SMEM early-out flag and the relaxation
+  counter become per-query ``[K]`` vectors, so a converged query degrades
+  to predicated no-op grid steps while stragglers keep relaxing.
   Distances update in place (Gauss–Seidel within a sweep: tiles later in
   the grid see earlier tiles' improvements, which only accelerates
   convergence of the monotone min-plus operator). The frontier for sweep
@@ -39,6 +48,10 @@ VMEM working set per step:
   prev + frontier (fixpoint)   8 * block_pad
   edge chunk (src, w, dstrel, pruned) ~16 * EB
   one-hot tile                 4 * EB * VB   (dominant; 512*128*4 = 256 KiB)
+The batched variant multiplies the dist/prev/frontier terms by K (the
+in/out distance and scratch buffers are [K, block_pad] and resident for
+the whole call); the edge chunk and one-hot terms are unchanged — that is
+the VMEM price of reusing one edge stream for K queries.
 """
 from __future__ import annotations
 
@@ -261,6 +274,114 @@ def relax_dst_tiled_fixpoint(dist_pad, front_pad, src_t, w_t, dstrel_t,
             pltpu.VMEM((bp,), jnp.float32),              # prev-sweep snapshot
             pltpu.VMEM((bp,), jnp.float32),              # current frontier
             pltpu.SMEM((2,), jnp.int32),                 # active flag, count
+        ],
+        interpret=interpret,
+    )(dist_pad, front_pad, src_t, w_t, dstrel_t, pruned_t)
+
+
+def _relax_fixpoint_batch_kernel(dist_ref, front_ref, src_ref, w_ref,
+                                 dstrel_ref, pruned_ref, out_ref, resid_ref,
+                                 nrel_ref, prev_ref, fcur_ref, active_ref,
+                                 count_ref, *, vb: int, n_vtiles: int,
+                                 n_chunks: int, n_sweeps: int):
+    """Fixpoint kernel with a query axis. Grid (sweep, vtile, chunk, query);
+    the query axis is innermost so the edge chunk loaded for (vtile, chunk)
+    is reused by every query before the next chunk streams in.
+
+    Per-query SMEM state: ``active_ref[q]`` (early-out once query q's sweep
+    changes nothing) and ``count_ref[q]`` (relaxation accumulator).
+    ``prev_ref``/``fcur_ref`` are [K, block_pad] VMEM scratch rows."""
+    s = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    q = pl.program_id(3)
+    first = (s == 0) & (i == 0) & (j == 0)
+    sweep_start = (i == 0) & (j == 0)
+    last = (s == n_sweeps - 1) & (i == n_vtiles - 1) & (j == n_chunks - 1)
+    qrow = pl.dslice(q, 1)
+
+    @pl.when(first)
+    def _init():
+        out_ref[qrow, :] = dist_ref[qrow, :]
+        prev_ref[qrow, :] = dist_ref[qrow, :]
+        fcur_ref[qrow, :] = front_ref[qrow, :]
+        active_ref[q] = jnp.any(front_ref[qrow, :] > 0).astype(jnp.int32)
+        count_ref[q] = 0
+
+    @pl.when(sweep_start & (s > 0) & (active_ref[q] > 0))
+    def _advance_frontier():
+        newf = (out_ref[qrow, :] < prev_ref[qrow, :]).astype(jnp.float32)
+        fcur_ref[qrow, :] = newf
+        active_ref[q] = jnp.any(newf > 0).astype(jnp.int32)
+        prev_ref[qrow, :] = out_ref[qrow, :]
+
+    @pl.when(active_ref[q] > 0)
+    def _relax():
+        src, w, dstrel = _edge_chunk(src_ref, w_ref, dstrel_ref, pruned_ref)
+        f_src = jnp.take(fcur_ref[qrow, :][0], src) > 0
+        # Gauss–Seidel: gather from query q's live distances
+        d_src = jnp.take(out_ref[qrow, :][0], src)
+        cand = jnp.where(f_src, d_src + w, INF)
+        count_ref[q] = count_ref[q] + jnp.sum(f_src & (w < INF)).astype(jnp.int32)
+        mins = _tile_min(cand, dstrel, vb=vb)
+        cur = out_ref[qrow, pl.dslice(i * vb, vb)]
+        out_ref[qrow, pl.dslice(i * vb, vb)] = jnp.minimum(cur, mins)
+
+    @pl.when(last)
+    def _fin():
+        resid_ref[qrow, :] = (out_ref[qrow, :] < prev_ref[qrow, :]).astype(
+            jnp.float32)
+        nrel_ref[q] = count_ref[q]
+
+
+def relax_dst_tiled_fixpoint_batch(dist_pad, front_pad, src_t, w_t, dstrel_t,
+                                   pruned_t, *, vb: int, eb: int,
+                                   n_sweeps: int, interpret: bool = True):
+    """Batched multi-query fixpoint: ``dist_pad``/``front_pad`` are
+    [K, block_pad]; the dst-tiled edge layout (and the Trishla pruned mask)
+    is SHARED by all K queries — built/gathered once, streamed once per
+    (vtile, chunk) grid step and reused K times.
+
+    Returns (new_dist [K, block_pad], residual_frontier [K, block_pad] f32
+    0/1, n_relax [K] i32). A query's residual row is empty iff its fixpoint
+    was reached within ``n_sweeps``."""
+    n_vtiles, n_chunks, eb_l = src_t.shape
+    nq, bp = dist_pad.shape
+    assert eb_l == eb and bp == n_vtiles * vb
+
+    grid = (n_sweeps, n_vtiles, n_chunks, nq)
+    # Every dist-shaped buffer uses a CONSTANT full-array block: the live
+    # distances are read back on every revisit (Gauss–Seidel gather + min
+    # accumulate), and a revisited out block is only guaranteed to keep its
+    # data — and to not be flushed to HBM once per grid step — when its
+    # block index never changes between steps (same argument as the
+    # single-query kernel's constant out spec). The kernel addresses query
+    # rows with pl.dslice(q, 1).
+    full_spec = pl.BlockSpec((nq, bp), lambda s, i, j, q: (0, 0))
+    edge_spec = pl.BlockSpec((1, 1, eb), lambda s, i, j, q: (i, j, 0))
+    kernel = functools.partial(_relax_fixpoint_batch_kernel, vb=vb,
+                               n_vtiles=n_vtiles, n_chunks=n_chunks,
+                               n_sweeps=n_sweeps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[full_spec, full_spec,
+                  edge_spec, edge_spec, edge_spec, edge_spec],
+        out_specs=[
+            full_spec,                                    # live distances
+            full_spec,                                    # residual frontiers
+            pl.BlockSpec((nq,), lambda s, i, j, q: (0,)), # per-query counts
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, bp), dist_pad.dtype),
+            jax.ShapeDtypeStruct((nq, bp), jnp.float32),
+            jax.ShapeDtypeStruct((nq,), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((nq, bp), jnp.float32),           # prev-sweep snapshots
+            pltpu.VMEM((nq, bp), jnp.float32),           # current frontiers
+            pltpu.SMEM((nq,), jnp.int32),                # per-query active
+            pltpu.SMEM((nq,), jnp.int32),                # per-query count
         ],
         interpret=interpret,
     )(dist_pad, front_pad, src_t, w_t, dstrel_t, pruned_t)

@@ -3,6 +3,12 @@
     PYTHONPATH=src python -m repro.launch.sssp_run --graph rmat --scale 12 \
         --parts 8 --exchange bucket --toka toka2 --solver delta
 
+Batched query mode — K sources amortize one partition/preprocess over the
+whole batch and ride a single compiled solve:
+
+    ... repro.launch.sssp_run --sources 0,17,1999        # explicit batch
+    ... repro.launch.sssp_run --num-sources 16 --batch   # sampled batch
+
 Backends: ``sim`` (single device, any partition count) and ``shmap``
 (shard_map over real devices — on a TPU pod this is the deployment path;
 here it requires XLA_FLAGS device-count spoofing, see tests/test_multidevice).
@@ -14,7 +20,8 @@ import time
 
 import numpy as np
 
-from repro.core import SsspConfig, build_shards, solve_sim, solve_shmap
+from repro.core import (SsspConfig, build_shards, solve_shmap,
+                        solve_shmap_batch, solve_sim, solve_sim_batch)
 from repro.graph import (dijkstra_reference, rmat_graph, road_grid_graph,
                          random_graph)
 
@@ -27,6 +34,14 @@ def main():
     p.add_argument("--side", type=int, default=64)
     p.add_argument("--parts", type=int, default=8)
     p.add_argument("--source", type=int, default=-1)
+    p.add_argument("--sources", default=None,
+                   help="comma-separated source list; solves the whole "
+                        "batch in one multi-query run")
+    p.add_argument("--num-sources", type=int, default=0,
+                   help="sample this many sources for a batched run")
+    p.add_argument("--batch", action="store_true",
+                   help="batched query mode; equivalent to --num-sources 8 "
+                        "unless --sources/--num-sources pick the batch")
     p.add_argument("--exchange", default="bucket",
                    choices=["bucket", "pmin", "a2a_dense"])
     p.add_argument("--toka", default="toka0",
@@ -46,38 +61,62 @@ def main():
     else:
         g = random_graph(n=1 << args.scale, m=(1 << args.scale) * args.edge_factor,
                          seed=0)
-    source = args.source if args.source >= 0 else int(g.src[0])
-    print(f"graph: {g.n_vertices}v {g.n_edges}e, source={source}, "
-          f"P={args.parts}")
+    if args.sources:
+        sources = [int(s) for s in args.sources.split(",")]
+    elif args.batch or args.num_sources:
+        k = args.num_sources or 8
+        rng = np.random.default_rng(0)
+        sources = sorted(int(s) for s in
+                         rng.choice(g.n_vertices, size=k, replace=False))
+    else:
+        sources = [args.source if args.source >= 0 else int(g.src[0])]
+    batched = len(sources) > 1
+    print(f"graph: {g.n_vertices}v {g.n_edges}e, "
+          f"sources={sources if batched else sources[0]}, P={args.parts}")
 
     t0 = time.time()
     sh = build_shards(g, args.parts, enumerate_triangles=not args.no_prune)
     print(f"partition+preprocess: {time.time() - t0:.2f}s "
-          f"(cut edges: {int(np.asarray(sh.inter_edges).sum())})")
+          f"(cut edges: {int(np.asarray(sh.inter_edges).sum())}) "
+          f"— amortized over {len(sources)} quer"
+          f"{'ies' if batched else 'y'}")
 
     cfg = SsspConfig(exchange=args.exchange, toka=args.toka,
                      local_solver=args.solver, delta=args.delta,
                      prune_online=not args.no_prune)
     t0 = time.time()
     if args.backend == "sim":
-        dist, stats = solve_sim(sh, source, cfg)
+        dists, stats = solve_sim_batch(sh, sources, cfg)
     else:
         import jax
         from repro import compat
         n_dev = len(jax.devices())
         mesh = compat.make_mesh((n_dev,), ("data",))
-        dist, stats = solve_shmap(sh, source, cfg, mesh, ("data",))
+        dists, stats = solve_shmap_batch(sh, sources, cfg, mesh, ("data",))
     dt = time.time() - t0
     mteps = int(stats.relaxations) / dt / 1e6
+    qps = len(sources) / dt
     print(f"solve: {dt:.3f}s  rounds={int(stats.rounds)} "
           f"relax={int(stats.relaxations)} msgs={int(stats.msgs_sent)} "
-          f"pruned={int(stats.pruned_edges)}  MTEPS={mteps:.1f}")
-    print(f"reachable: {int(np.isfinite(dist).sum())}/{g.n_vertices}")
+          f"pruned={int(stats.pruned_edges)}  MTEPS={mteps:.1f} "
+          f"queries/s={qps:.2f}")
+    if batched:
+        qr = np.asarray(stats.q_rounds)
+        qx = np.asarray(stats.q_relaxations)
+        for k, s in enumerate(sources):
+            reach = int(np.isfinite(dists[k]).sum())
+            print(f"  query[{k}] source={s}: rounds={int(qr[k])} "
+                  f"relax={int(qx[k])} reachable={reach}/{g.n_vertices}")
+    else:
+        print(f"reachable: {int(np.isfinite(dists[0]).sum())}/{g.n_vertices}")
 
     if args.validate:
-        ref = dijkstra_reference(g, source)
-        ok = np.allclose(dist, ref, rtol=1e-5, atol=1e-4)
-        print(f"validation vs Dijkstra: {'OK' if ok else 'MISMATCH'}")
+        ok = True
+        for k, s in enumerate(sources):
+            ref = dijkstra_reference(g, s)
+            ok &= np.allclose(dists[k], ref, rtol=1e-5, atol=1e-4)
+        print(f"validation vs Dijkstra ({len(sources)} quer"
+              f"{'ies' if batched else 'y'}): {'OK' if ok else 'MISMATCH'}")
         if not ok:
             raise SystemExit(1)
 

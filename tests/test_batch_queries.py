@@ -1,0 +1,250 @@
+"""Batched multi-source query engine: parity, equivalence, acceptance.
+
+Three layers, binding the query axis to the system:
+  1. exchange-mode equivalence: bucket == pmin == a2a_dense distances for
+     K=1 and K>1, in both sim and shmap backends
+  2. batched-vs-sequential parity: solve_sim_batch(sources) == K
+     independent solve_sim calls == dijkstra_reference per source, with
+     per-query stats matching the isolated runs
+  3. acceptance matrix (slow): K=8 sources on all three bench graphs for
+     all three local solvers, sim and shmap
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import (SsspConfig, build_shards, solve_sim, solve_sim_batch)
+from repro.graph import dijkstra_reference, random_graph, rmat_graph
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+EXCHANGES = ("bucket", "pmin", "a2a_dense")
+
+
+def _sources(g, nq):
+    rng = np.random.default_rng(17)
+    return sorted(int(s) for s in
+                  rng.choice(g.n_vertices, size=nq, replace=False))
+
+
+# ------------------------------------------- exchange-mode equivalence ----
+
+@pytest.mark.parametrize("nq", [1, 3])
+def test_exchange_modes_equivalent_sim(nq):
+    """bucket / pmin / a2a_dense move different bytes but must produce the
+    same distances for every query in the batch."""
+    g = random_graph(n=180, m=700, seed=21)
+    sh = build_shards(g, 5)
+    sources = _sources(g, nq)
+    dists = {}
+    for ex in EXCHANGES:
+        d, _ = solve_sim_batch(sh, sources, SsspConfig(exchange=ex))
+        dists[ex] = d
+    refs = np.stack([dijkstra_reference(g, s) for s in sources])
+    for ex in EXCHANGES:
+        np.testing.assert_allclose(dists[ex], refs, rtol=1e-5, atol=1e-4)
+        np.testing.assert_allclose(dists[ex], dists["bucket"],
+                                   rtol=1e-6, atol=1e-6)
+
+
+_SHMAP_PROG = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import numpy as np
+    from repro import compat
+    from repro.core import SsspConfig, build_shards, solve_shmap_batch
+    from repro.graph import random_graph, dijkstra_reference
+
+    g = random_graph(n=180, m=700, seed=21)
+    sh = build_shards(g, 4)
+    mesh = compat.make_mesh((4,), ("d",))
+    rng = np.random.default_rng(17)
+    for nq in (1, 3):
+        sources = sorted(int(s) for s in
+                         rng.choice(g.n_vertices, size=nq, replace=False))
+        refs = np.stack([dijkstra_reference(g, s) for s in sources])
+        base = None
+        for ex in ("bucket", "pmin", "a2a_dense"):
+            d, _ = solve_shmap_batch(sh, sources, SsspConfig(exchange=ex),
+                                     mesh, ("d",))
+            assert np.allclose(d, refs, 1e-5, 1e-4), (ex, nq)
+            base = d if base is None else base
+            assert np.allclose(d, base, 1e-6, 1e-6), (ex, nq)
+    print("SHMAP EXCHANGE OK")
+""")
+
+
+def test_exchange_modes_equivalent_shmap():
+    """Same equivalence under shard_map with real collectives on a spoofed
+    4-device mesh, K=1 and K=3 (subprocess: device count must be set
+    before jax initializes)."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SHMAP_PROG], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "SHMAP EXCHANGE OK" in out.stdout
+
+
+# --------------------------------------- batched-vs-sequential parity ----
+
+def test_batch_matches_sequential_and_dijkstra():
+    """solve_sim_batch(K sources) == K independent solve_sim calls ==
+    dijkstra_reference, per source."""
+    g = rmat_graph(scale=7, edge_factor=6, seed=13)
+    sh = build_shards(g, 4)
+    sources = _sources(g, 5)
+    cfg = SsspConfig()
+    batch_d, _ = solve_sim_batch(sh, sources, cfg)
+    for k, s in enumerate(sources):
+        single_d, _ = solve_sim(sh, s, cfg)
+        np.testing.assert_allclose(batch_d[k], single_d, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(batch_d[k], dijkstra_reference(g, s),
+                                   rtol=1e-5, atol=1e-4)
+
+
+def test_batch_per_query_stats_match_sequential():
+    """With pruning off (pruning trajectories depend on batch composition),
+    each query's rounds and relaxation count must be EXACTLY what its
+    isolated run reports: the converged-query mask means stragglers never
+    add work to finished queries."""
+    g = random_graph(n=200, m=800, seed=23)
+    sh = build_shards(g, 4)
+    sources = _sources(g, 4)
+    cfg = SsspConfig(prune_online=False)
+    _, bstats = solve_sim_batch(sh, sources, cfg)
+    q_rounds = np.asarray(bstats.q_rounds)
+    q_relax = np.asarray(bstats.q_relaxations)
+    for k, s in enumerate(sources):
+        _, sstats = solve_sim(sh, s, cfg)
+        assert int(q_rounds[k]) == int(sstats.rounds), (k, s)
+        assert int(q_relax[k]) == int(sstats.relaxations), (k, s)
+    # the batch runs as long as its slowest member, no longer
+    assert int(bstats.rounds) == int(q_rounds.max())
+
+
+def test_batch_stats_aggregate_consistency():
+    """Scalar totals are the sums of the per-query columns; single-source
+    wrappers report K=1 shapes."""
+    g = random_graph(n=150, m=600, seed=29)
+    sh = build_shards(g, 4)
+    _, stats = solve_sim_batch(sh, _sources(g, 3),
+                               SsspConfig(prune_online=False))
+    assert stats.q_rounds.shape == (3,)
+    assert int(stats.relaxations) == int(np.asarray(stats.q_relaxations).sum())
+    _, s1 = solve_sim(sh, 0, SsspConfig())
+    assert s1.q_rounds.shape == (1,)
+    assert int(s1.q_rounds[0]) == int(s1.rounds)
+
+
+@pytest.mark.parametrize("solver", ["bellman", "delta", "pallas"])
+def test_batch_local_solvers(solver):
+    """Every local solver backend handles the query axis."""
+    g = rmat_graph(scale=6, edge_factor=5, seed=31)
+    sh = build_shards(g, 3)
+    sources = _sources(g, 4)
+    d, _ = solve_sim_batch(sh, sources,
+                           SsspConfig(local_solver=solver, delta=6.0))
+    refs = np.stack([dijkstra_reference(g, s) for s in sources])
+    np.testing.assert_allclose(d, refs, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("toka", ["toka0", "toka1", "toka2"])
+def test_batch_toka_modes(toka):
+    """Per-query termination: each detector tracks K queries independently
+    and the loop exits only when all are done."""
+    g = random_graph(n=160, m=640, seed=37)
+    sh = build_shards(g, 4)
+    sources = _sources(g, 3)
+    d, stats = solve_sim_batch(sh, sources, SsspConfig(toka=toka))
+    refs = np.stack([dijkstra_reference(g, s) for s in sources])
+    np.testing.assert_allclose(d, refs, rtol=1e-5, atol=1e-4)
+    assert int(stats.rounds) >= int(np.asarray(stats.q_rounds).max())
+
+
+def test_out_of_range_source_raises():
+    """A bad source id must fail loudly, not return all-INF distances."""
+    g = random_graph(n=100, m=300, seed=43)
+    sh = build_shards(g, 4)
+    with pytest.raises(ValueError, match="out of range"):
+        solve_sim_batch(sh, [0, g.n_vertices + 5])
+    with pytest.raises(ValueError, match="out of range"):
+        solve_sim(sh, -1, SsspConfig())
+
+
+def test_sim_round_cache_reused():
+    """Repeated solves against the same shards/config reuse one compiled
+    round — the amortization a query engine exists for."""
+    from repro.core import sssp as sssp_mod
+    g = random_graph(n=100, m=300, seed=47)
+    sh = build_shards(g, 4)
+    cfg = SsspConfig()
+    assert sssp_mod._sim_round(sh, cfg) is sssp_mod._sim_round(sh, cfg)
+    # distinct config -> distinct compiled round
+    assert sssp_mod._sim_round(sh, cfg) is not sssp_mod._sim_round(
+        sh, SsspConfig(exchange="pmin"))
+
+
+def test_sim_rounds_reported_from_carry():
+    """Bugfix regression: solve_sim must report carry.rounds (the traced
+    counter the shmap backend also reports), not the python loop index."""
+    g = random_graph(n=120, m=500, seed=41)
+    sh = build_shards(g, 4)
+    _, stats = solve_sim(sh, 0, SsspConfig())
+    # the jitted round increments carry.rounds exactly once per executed
+    # round; q_rounds counts rounds while the (single) query was live, so
+    # the two can only differ by the trailing all-done round
+    assert 0 <= int(stats.rounds) - int(stats.q_rounds[0]) <= 1
+
+
+# ------------------------------------------- acceptance matrix (slow) ----
+
+_ACCEPT_PROG = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import numpy as np
+    from repro import compat
+    from repro.core import (SsspConfig, build_shards, solve_shmap_batch,
+                            solve_sim_batch)
+    from repro.graph import rmat_graph, road_grid_graph, dijkstra_reference
+
+    graphs = {
+        "graph1-like": rmat_graph(scale=11, edge_factor=2, seed=1),
+        "graph2-like": road_grid_graph(side=48, seed=2),
+        "graph3-like": rmat_graph(scale=9, edge_factor=24, seed=3),
+    }
+    K = 8
+    rng = np.random.default_rng(5)
+    for name, g in graphs.items():
+        sources = sorted(int(s) for s in
+                         rng.choice(g.n_vertices, size=K, replace=False))
+        refs = np.stack([dijkstra_reference(g, s) for s in sources])
+        sh = build_shards(g, 8, enumerate_triangles=False)
+        mesh = compat.make_mesh((8,), ("d",))
+        for solver in ("bellman", "delta", "pallas"):
+            cfg = SsspConfig(local_solver=solver, prune_online=False)
+            d, _ = solve_sim_batch(sh, sources, cfg)
+            assert np.allclose(d, refs, 1e-5, 1e-4), ("sim", name, solver)
+            d, _ = solve_shmap_batch(sh, sources, cfg, mesh, ("d",))
+            assert np.allclose(d, refs, 1e-5, 1e-4), ("shmap", name, solver)
+        print(f"{name} OK")
+    print("BATCH MATRIX OK")
+""")
+
+
+@pytest.mark.slow
+def test_batch_acceptance_matrix():
+    """Acceptance: K=8 sources match per-source dijkstra_reference on all
+    three bench graphs for all three local solvers, sim and shmap."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _ACCEPT_PROG], env=env,
+                         capture_output=True, text=True, timeout=3000)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "BATCH MATRIX OK" in out.stdout
