@@ -12,9 +12,12 @@ from __future__ import annotations
 
 import time
 
+import jax
 import numpy as np
 
-from repro.core import SsspConfig, build_shards, solve_sim, solve_sim_batch
+from repro.core import (SsspConfig, build_shards, sim_phase_fns, solve_sim,
+                        solve_sim_batch)
+from repro.core import sssp as sssp_mod
 from repro.graph import rmat_graph, road_grid_graph, dijkstra_reference
 
 BENCH_GRAPHS = {
@@ -149,6 +152,68 @@ def bench_batch_throughput(out):
                 f"rounds={int(stats.rounds)}")
 
 
+def _block(x):
+    return jax.tree_util.tree_map(
+        lambda a: a.block_until_ready() if hasattr(a, "block_until_ready")
+        else a, x)
+
+
+def _time_fn(fn, *args, repeats=5):
+    _block(fn(*args))                      # warmup + compile
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        _block(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def bench_phase_breakdown(out):
+    """Per-phase wall time of one round (local / send / exchange / merge)
+    on real mid-solve state, for both send/merge backend pairs and
+    K in {1, 16} — so a kernel win (or regression) is attributable to the
+    phase that caused it, not smeared over the whole solve.
+
+    Methodology: run two full rounds from the initial carry to reach a
+    state with live frontiers on every shard, then drive each phase of
+    round three in isolation through ``sim_phase_fns`` (the same stage
+    callables the round dispatches) with jitted, block_until_ready timing.
+    Interpret-mode pallas times are NOT TPU perf (same caveat as the relax
+    kernel benchmarks) — the trajectory, not the absolute number, is the
+    tracked signal."""
+    g = BENCH_GRAPHS["graph1-like"]()
+    rng = np.random.default_rng(11)
+    sh = build_shards(g, 8, enumerate_triangles=False)
+    for k in (1, 16):
+        sources = sorted(int(s) for s in
+                         rng.choice(g.n_vertices, size=k, replace=False))
+        for backend in ("xla", "pallas"):
+            cfg = SsspConfig(prune_online=False, send_backend=backend,
+                             merge_backend=backend)
+            round_fn = sssp_mod._sim_round(sh, cfg)
+            carry = sssp_mod._init_carry(sh, sources, cfg, rank=None,
+                                         vmapped=True)
+            carry = round_fn(round_fn(carry))      # mid-solve state
+            fns = sim_phase_fns(sh, cfg)
+            act = carry.active & ~carry.done[..., None]
+            dist = fns["local"](carry.dist, act, carry.pruned,
+                                carry.tri_cursor)[0]
+            payload = fns["send"](dist, carry.pruned, carry.last_sent)[0]
+            incoming = fns["exchange"](payload)
+            times = {
+                "local": _time_fn(fns["local"], carry.dist, act,
+                                  carry.pruned, carry.tri_cursor),
+                "send": _time_fn(fns["send"], dist, carry.pruned,
+                                 carry.last_sent),
+                "exchange": _time_fn(fns["exchange"], payload),
+                "merge": _time_fn(fns["merge"], dist, incoming),
+            }
+            total = sum(times.values())
+            for phase, t in times.items():
+                out(f"phase[{phase}][K={k}][{backend}]", t * 1e6,
+                    f"share={t / total:.2f}")
+
+
 def run_all(out):
     bench_scaling(out)
     bench_trishla(out)
@@ -156,3 +221,4 @@ def run_all(out):
     bench_local_solver(out)
     bench_pallas_solver(out)
     bench_batch_throughput(out)
+    bench_phase_breakdown(out)

@@ -1,5 +1,7 @@
-from repro.core.sssp import (SsspConfig, SsspStats, build_shmap_solver,
+from repro.core.sssp import (RoundPipeline, SsspConfig, SsspStats,
+                             build_pipeline, build_shmap_solver, sim_phase_fns,
                              solve_shmap, solve_shmap_batch, solve_sim,
                              solve_sim_batch)
 from repro.core.shards import SsspShards, build_shards
 from repro.core.partition import partition_1d, inter_edge_counts
+from repro.core import phases

@@ -18,8 +18,8 @@ before communicating) is iterated *frontier-masked relaxation*:
   ``pallas_call`` (no XLA re-entry per sweep, no scatter lowering); a thin
   ``lax.while_loop`` re-invokes the kernel on the residual frontier until
   empty. Requires the dst-tiled edge layout precomputed by
-  ``build_shards`` (``SsspShards.rx_*``); silently falls back to
-  ``bellman`` when the layout is absent.
+  ``build_shards`` (``SsspShards.rx_*``); falls back to ``bellman`` with a
+  one-time warning when the layout is absent.
 
 All functions operate on ONE shard's local arrays (no leading P dim); the
 driver vmaps (sim backend) or shard_maps (distributed backend) over shards.
@@ -38,6 +38,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import phases
 from repro.kernels.relax import relax_fixpoint_batch_pallas
 
 INF = jnp.float32(jnp.inf)
@@ -161,6 +162,41 @@ def local_fixpoint_pallas_batch(dist, active, pruned_loc, relax_layout, *,
                        relaxations=out[2])
 
 
+# ---- local-solver registry (phase "local_solver") ------------------------
+# Uniform batched signature so the driver resolves the backend by name and
+# SsspConfig validates it eagerly; every entry returns LocalResult with
+# dist [K, block], changed [K], relaxations [K].
+
+@phases.register("local_solver", "bellman")
+def _batch_bellman(dist, active, loc_src, loc_dst, loc_w, pruned_loc, *,
+                   max_iters, delta, relax_layout, relax_vb, pallas_sweeps,
+                   pallas_interpret) -> LocalResult:
+    return jax.vmap(partial(local_fixpoint_bellman, loc_src=loc_src,
+                            loc_dst=loc_dst, loc_w=loc_w,
+                            pruned_loc=pruned_loc,
+                            max_iters=max_iters))(dist, active)
+
+
+@phases.register("local_solver", "delta")
+def _batch_delta(dist, active, loc_src, loc_dst, loc_w, pruned_loc, *,
+                 max_iters, delta, relax_layout, relax_vb, pallas_sweeps,
+                 pallas_interpret) -> LocalResult:
+    return jax.vmap(partial(local_fixpoint_delta, loc_src=loc_src,
+                            loc_dst=loc_dst, loc_w=loc_w,
+                            pruned_loc=pruned_loc, max_iters=max_iters,
+                            delta=delta))(dist, active)
+
+
+@phases.register("local_solver", "pallas")
+def _batch_pallas(dist, active, loc_src, loc_dst, loc_w, pruned_loc, *,
+                  max_iters, delta, relax_layout, relax_vb, pallas_sweeps,
+                  pallas_interpret) -> LocalResult:
+    return local_fixpoint_pallas_batch(dist, active, pruned_loc, relax_layout,
+                                       vb=relax_vb, max_iters=max_iters,
+                                       sweeps=pallas_sweeps,
+                                       interpret=pallas_interpret)
+
+
 def local_fixpoint_batch(dist, active, loc_src, loc_dst, loc_w, pruned_loc, *,
                          solver: str = "bellman", max_iters: int = 10_000,
                          delta: float = 4.0, relax_layout=None,
@@ -171,24 +207,17 @@ def local_fixpoint_batch(dist, active, loc_src, loc_dst, loc_w, pruned_loc, *,
     Returns LocalResult with dist [K, block], changed [K], relaxations [K].
     """
     if solver == "pallas" and relax_layout is None:
-        solver = "bellman"   # no dst-tiled layout carried by the shards
-    if solver == "bellman":
-        return jax.vmap(partial(local_fixpoint_bellman, loc_src=loc_src,
-                                loc_dst=loc_dst, loc_w=loc_w,
-                                pruned_loc=pruned_loc,
-                                max_iters=max_iters))(dist, active)
-    if solver == "delta":
-        return jax.vmap(partial(local_fixpoint_delta, loc_src=loc_src,
-                                loc_dst=loc_dst, loc_w=loc_w,
-                                pruned_loc=pruned_loc, max_iters=max_iters,
-                                delta=delta))(dist, active)
-    if solver == "pallas":
-        return local_fixpoint_pallas_batch(dist, active, pruned_loc,
-                                           relax_layout, vb=relax_vb,
-                                           max_iters=max_iters,
-                                           sweeps=pallas_sweeps,
-                                           interpret=pallas_interpret)
-    raise ValueError(f"unknown local solver {solver!r}")
+        phases.warn_once(
+            "local_solver.pallas.no_layout",
+            "local_solver='pallas' falling back to 'bellman': the shards "
+            "carry no dst-tiled edge layout (build_shards was called with "
+            "relax_layout=False)")
+        solver = "bellman"
+    impl = phases.resolve("local_solver", solver)
+    return impl(dist, active, loc_src, loc_dst, loc_w, pruned_loc,
+                max_iters=max_iters, delta=delta, relax_layout=relax_layout,
+                relax_vb=relax_vb, pallas_sweeps=pallas_sweeps,
+                pallas_interpret=pallas_interpret)
 
 
 def local_fixpoint(dist, active, loc_src, loc_dst, loc_w, pruned_loc, *,

@@ -1,0 +1,83 @@
+"""Backend registry for the SP-Async round pipeline.
+
+The outer round is a fixed sequence of phases — local solve, send pack,
+exchange, merge, termination — but each phase has interchangeable
+*backends* (e.g. the send pack can run as XLA ``segment_min`` or as the
+slot-tiled Pallas kernel). This module is the small registry that maps
+``(phase, backend_name) -> implementation`` so:
+
+- ``SsspConfig`` can validate every backend name EAGERLY at construction
+  (a typo raises ``ValueError`` listing the valid names instead of failing
+  deep inside tracing),
+- the solver builds its round by resolution, never by ``if`` ladders, and
+  new stages/backends (query caching, landmark reuse, new exchange modes)
+  slot in with a ``@register(...)`` decorator without touching the loop.
+
+Registered phases and their config keys:
+
+  ============== ======================= ===========================
+  phase          config key              backends
+  ============== ======================= ===========================
+  local_solver   ``cfg.local_solver``    bellman | delta | pallas
+  send           ``cfg.send_backend``    xla | pallas
+  exchange       ``cfg.exchange``        bucket | pmin | a2a_dense
+  merge          ``cfg.merge_backend``   xla | pallas
+  toka           ``cfg.toka``            toka0 | toka1 | toka2
+  ============== ======================= ===========================
+
+Implementations live next to the machinery they use (``local_solver.py``
+registers the local solvers, ``sssp.py`` the send/exchange/merge/toka
+stages); this module stays dependency-free so anything may import it.
+"""
+from __future__ import annotations
+
+import warnings
+
+_REGISTRY: dict[str, dict[str, object]] = {}
+
+
+def register(phase: str, name: str):
+    """Decorator: register ``obj`` as backend ``name`` of ``phase``."""
+
+    def deco(obj):
+        _REGISTRY.setdefault(phase, {})[name] = obj
+        return obj
+
+    return deco
+
+
+def resolve(phase: str, name: str):
+    """Look up a backend; unknown names raise a ``ValueError`` that names
+    the valid options (this is what makes ``SsspConfig`` validation eager
+    and its errors actionable)."""
+    impls = _REGISTRY.get(phase, {})
+    if name not in impls:
+        raise ValueError(
+            f"unknown {phase} backend {name!r}; valid: {sorted(impls)}")
+    return impls[name]
+
+
+def backends(phase: str) -> tuple[str, ...]:
+    """Registered backend names for a phase (stable order)."""
+    return tuple(sorted(_REGISTRY.get(phase, ())))
+
+
+def validate(phase: str, name: str) -> str:
+    """``resolve`` for its side effect only; returns ``name`` unchanged."""
+    resolve(phase, name)
+    return name
+
+
+# -------------------------------------------------------------------------
+# one-time warnings (pallas backends silently degrading to XLA would hide
+# a perf cliff; warn once per process, not once per trace)
+# -------------------------------------------------------------------------
+
+_WARNED: set[str] = set()
+
+
+def warn_once(key: str, message: str) -> None:
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(message, UserWarning, stacklevel=3)

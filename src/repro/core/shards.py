@@ -16,7 +16,12 @@ routing* for the bucketed boundary exchange:
   shard q addressed by sender p's slot c. Built here by transposition.
 
 Everything here is one-time host preprocessing — the paper's "Graph
-Partition" phase.
+Partition" phase. Besides the routing tables, three Pallas tile layouts
+ride in the shards (each an instance of the same pre-tile-by-destination
+pattern): ``rx_*`` (local edges by vertex tile, for the relax kernel),
+``tx_*`` (cut edges by message-slot tile + the ``tx_payload_slot`` payload
+inverse, for the send kernel), and ``mx_*`` (receive positions by vertex
+tile, for the merge kernel).
 """
 from __future__ import annotations
 
@@ -28,7 +33,9 @@ import numpy as np
 
 from repro.graph.structure import Graph, PartitionedGraph
 from repro.core.partition import partition_1d
+from repro.kernels.merge import build_msg_tiled_layout
 from repro.kernels.relax import build_dst_tiled_layout
+from repro.kernels.send import build_slot_tiled_layout
 
 
 def _pad2(rows, width, fill, dtype):
@@ -79,6 +86,26 @@ class SsspShards:
     rx_eid: jax.Array | None = None     # [P, n_vtiles, n_chunks, EB] int32
     rx_vb: int = dataclasses.field(default=128, metadata=dict(static=True))
     rx_eb: int = dataclasses.field(default=512, metadata=dict(static=True))
+    # slot-tiled layout of the CUT edges for the Pallas send kernel (same
+    # dst-tiled pattern with the message SLOT in the destination role;
+    # None when comm_layout=False). tx_eid maps tiled slots back to cut
+    # edge ids (sentinel = e_cut) for the runtime Trishla pruned gather.
+    tx_src: jax.Array | None = None     # [P, n_stiles, n_chunks, EB] int32
+    tx_w: jax.Array | None = None       # [P, n_stiles, n_chunks, EB] f32
+    tx_segrel: jax.Array | None = None  # [P, n_stiles, n_chunks, EB] int32
+    tx_eid: jax.Array | None = None     # [P, n_stiles, n_chunks, EB] int32
+    # static inverse of (slot_owner, slot_pos): the slot feeding each
+    # bucketed payload position, so the payload scatter becomes a gather
+    tx_payload_slot: jax.Array | None = None  # [P, P, C] int32 (sentinel = S)
+    tx_sb: int = dataclasses.field(default=128, metadata=dict(static=True))
+    tx_eb: int = dataclasses.field(default=512, metadata=dict(static=True))
+    # msg-tiled receive routing for the Pallas merge kernel: flat incoming
+    # positions [0, P*C) grouped by destination vertex tile
+    mx_pos: jax.Array | None = None     # [P, n_vtiles, n_chunks, EB] int32
+    mx_dstrel: jax.Array | None = None  # [P, n_vtiles, n_chunks, EB] int32
+    mx_valid: jax.Array | None = None   # [P, n_vtiles, n_chunks, EB] int32
+    mx_vb: int = dataclasses.field(default=128, metadata=dict(static=True))
+    mx_eb: int = dataclasses.field(default=512, metadata=dict(static=True))
 
     @property
     def e_loc(self):
@@ -107,10 +134,35 @@ class SsspShards:
             return None
         return (self.rx_src, self.rx_w, self.rx_dstrel, self.rx_eid)
 
+    @property
+    def has_send_layout(self):
+        return self.tx_src is not None
+
+    @property
+    def send_layout(self):
+        """Per-call tuple consumed by the pallas send stage (or None)."""
+        if self.tx_src is None:
+            return None
+        return (self.tx_src, self.tx_w, self.tx_segrel, self.tx_eid)
+
+    @property
+    def has_merge_layout(self):
+        return self.mx_pos is not None
+
+    @property
+    def merge_layout(self):
+        """Per-call tuple consumed by the pallas merge stage (or None)."""
+        if self.mx_pos is None:
+            return None
+        return (self.mx_pos, self.mx_dstrel, self.mx_valid)
+
 
 def build_shards(g: Graph, n_parts: int, max_triangles_per_part: int | None = None,
                  enumerate_triangles: bool = True, relax_layout: bool = True,
-                 relax_vb: int = 128, relax_eb: int = 512) -> SsspShards:
+                 relax_vb: int = 128, relax_eb: int = 512,
+                 comm_layout: bool = True, send_sb: int = 128,
+                 send_eb: int = 512, merge_vb: int = 128,
+                 merge_eb: int = 512) -> SsspShards:
     pg = partition_1d(g, n_parts)
     P, block, n = pg.n_parts, pg.block, pg.n_vertices
 
@@ -276,6 +328,68 @@ def build_shards(g: Graph, n_parts: int, max_triangles_per_part: int | None = No
                   rx_dstrel=jnp.asarray(rx_dstrel, jnp.int32),
                   rx_eid=jnp.asarray(rx_eid, jnp.int32))
 
+    # ---- slot/msg-tiled layouts for the Pallas send + merge kernels -------
+    # Same one-time host build as rx_*: per-shard layouts share the tile
+    # count (slots padded to S / vertices to block are shard-uniform) but
+    # can differ in chunk count; pad to the max so they stack to [P, ...].
+    comm = dict(tx_src=None, tx_w=None, tx_segrel=None, tx_eid=None,
+                tx_payload_slot=None, mx_pos=None, mx_dstrel=None,
+                mx_valid=None)
+    if comm_layout:
+        per_shard = []
+        for p in range(P):
+            src_t, w_t, seg_t, eid_t, _sp = build_slot_tiled_layout(
+                cut_rows_src[p], cut_rows_seg[p], cut_rows_w[p], S,
+                sb=send_sb, eb=send_eb)
+            per_shard.append((np.asarray(src_t), np.asarray(w_t),
+                              np.asarray(seg_t), np.asarray(eid_t)))
+        n_stiles = per_shard[0][0].shape[0]
+        n_chunks = max(lay[0].shape[1] for lay in per_shard)
+        tx_src = np.zeros((P, n_stiles, n_chunks, send_eb), np.int64)
+        tx_w = np.full((P, n_stiles, n_chunks, send_eb), np.inf, np.float32)
+        tx_segrel = np.zeros((P, n_stiles, n_chunks, send_eb), np.int64)
+        tx_eid = np.full((P, n_stiles, n_chunks, send_eb), e_cut, np.int64)
+        for p, (src_t, w_t, seg_t, eid_t) in enumerate(per_shard):
+            nc = src_t.shape[1]
+            tx_src[p, :, :nc] = src_t
+            tx_w[p, :, :nc] = w_t
+            tx_segrel[p, :, :nc] = seg_t
+            # builder sentinel is the shard's own cut count; restamp to the
+            # padded-row sentinel e_cut so the runtime gather is uniform
+            eid = eid_t.astype(np.int64)
+            eid[eid == len(cut_rows_src[p])] = e_cut
+            tx_eid[p, :, :nc] = eid
+
+        # payload-position inverse: each (owner, pos) receives at most one
+        # slot, so the runtime [P, C] payload scatter becomes a gather
+        # (sentinel = S, out of the [0, S) slot range -> filled with +inf)
+        tx_payload_slot = np.full((P, P, C), S, np.int64)
+        for p in range(P):
+            owners, pos = slot_rows_owner[p], slot_pos_rows[p]
+            tx_payload_slot[p, owners, pos] = np.arange(len(owners))
+
+        mx_shards = [build_msg_tiled_layout(recv_idx[q], block, vb=merge_vb,
+                                            eb=merge_eb) for q in range(P)]
+        n_mtiles = mx_shards[0][3] // merge_vb
+        m_chunks = max(lay[0].shape[1] for lay in mx_shards)
+        mx_pos = np.zeros((P, n_mtiles, m_chunks, merge_eb), np.int64)
+        mx_dstrel = np.zeros((P, n_mtiles, m_chunks, merge_eb), np.int64)
+        mx_valid = np.zeros((P, n_mtiles, m_chunks, merge_eb), np.int64)
+        for q, (pos_t, dr_t, v_t, _bp) in enumerate(mx_shards):
+            nc = pos_t.shape[1]
+            mx_pos[q, :, :nc] = np.asarray(pos_t)
+            mx_dstrel[q, :, :nc] = np.asarray(dr_t)
+            mx_valid[q, :, :nc] = np.asarray(v_t)
+
+        comm = dict(tx_src=jnp.asarray(tx_src, jnp.int32),
+                    tx_w=jnp.asarray(tx_w, jnp.float32),
+                    tx_segrel=jnp.asarray(tx_segrel, jnp.int32),
+                    tx_eid=jnp.asarray(tx_eid, jnp.int32),
+                    tx_payload_slot=jnp.asarray(tx_payload_slot, jnp.int32),
+                    mx_pos=jnp.asarray(mx_pos, jnp.int32),
+                    mx_dstrel=jnp.asarray(mx_dstrel, jnp.int32),
+                    mx_valid=jnp.asarray(mx_valid, jnp.int32))
+
     return SsspShards(
         loc_src=jnp.asarray(_pad2(loc_rows_src, e_loc, block, np.int64), jnp.int32),
         loc_dst=jnp.asarray(_pad2(loc_rows_dst, e_loc, block, np.int64), jnp.int32),
@@ -298,5 +412,10 @@ def build_shards(g: Graph, n_parts: int, max_triangles_per_part: int | None = No
         block=block,
         rx_vb=relax_vb,
         rx_eb=relax_eb,
+        tx_sb=send_sb,
+        tx_eb=send_eb,
+        mx_vb=merge_vb,
+        mx_eb=merge_eb,
         **rx,
+        **comm,
     )

@@ -7,6 +7,16 @@ Trishla triangle enumeration, the dst-tiled Pallas edge layout) is
 amortized across the whole batch. Single-source entry points are thin
 K=1 wrappers.
 
+The round is an explicit *phase pipeline*: every phase (local, send,
+exchange, merge, termination) is a stage resolved from the backend
+registry in ``core/phases.py``, keyed by ``SsspConfig`` — so backends
+compose freely (e.g. ``local_solver="pallas", send_backend="pallas",
+merge_backend="xla"``) in both the sim and shmap drivers, and new stages
+slot in without touching the loop. The send and merge phases each have an
+``xla`` backend (generic ``segment_min`` / ``at[].min``) and a ``pallas``
+backend (the slot-tiled ``kernels/send`` pack and msg-tiled
+``kernels/merge`` scatter, over layouts precomputed by ``build_shards``).
+
 Round structure (one outer round = one inter-partition Bellman-Ford step):
 
   1. *Local phase* — every shard with a non-empty frontier (in ANY live
@@ -57,6 +67,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.core import phases
 from repro.core import toka as toka_mod
 from repro.core.local_solver import local_fixpoint_batch
 from repro.core.shards import SsspShards
@@ -64,6 +75,8 @@ from repro.core import trishla
 from repro.distributed.collectives import (
     all_to_all_tiled, and_reduce, flat_rank, or_reduce, ring_permute,
 )
+from repro.kernels.merge import merge_scatter_pallas
+from repro.kernels.send import send_pack_pallas, send_payload_bucket
 
 INF = jnp.float32(jnp.inf)
 
@@ -73,6 +86,8 @@ class SsspConfig:
     exchange: str = "bucket"        # bucket | pmin | a2a_dense
     toka: str = "toka0"             # toka0 | toka1 | toka2
     local_solver: str = "bellman"   # bellman | delta | pallas
+    send_backend: str = "xla"       # xla | pallas (cut-edge segment-min pack)
+    merge_backend: str = "xla"      # xla | pallas (incoming scatter-min)
     delta: float = 4.0
     local_iters: int = 10_000
     pallas_sweeps: int = 8          # relaxation sweeps fused per pallas_call
@@ -81,6 +96,15 @@ class SsspConfig:
     prune_offline_passes: int = 0   # vectorized Trishla before the solve
     tri_chunk: int = 256
     max_rounds: int = 100_000
+
+    def __post_init__(self):
+        # eager validation against the phase registry: a typo'd backend
+        # name fails HERE with the valid options, not deep inside tracing
+        phases.validate("exchange", self.exchange)
+        phases.validate("toka", self.toka)
+        phases.validate("local_solver", self.local_solver)
+        phases.validate("send", self.send_backend)
+        phases.validate("merge", self.merge_backend)
 
 
 class SsspStats(NamedTuple):
@@ -145,8 +169,21 @@ def _phase_local(shard: SsspShards, dist, active, pruned, cursor, cfg: SsspConfi
     return lax.cond(idle, prune, solve, dist, pruned, cursor)
 
 
-def _phase_send(shard: SsspShards, dist, pruned, last_sent, cfg: SsspConfig):
-    """Build the outgoing payload for all K queries.
+def _scatter_dense(shard: SsspShards, send_val, blk: int):
+    """Masked slot values -> dense [K, P, block] candidate rows addressed
+    by (owner, dst_local). Shared by both send backends: the dense payload
+    is bandwidth-bound assembly, not a reduction — there is nothing for a
+    kernel to win (the segment-min upstream of it is the hot part)."""
+    Pn = shard.recv_idx.shape[0]
+    return jax.vmap(
+        lambda v: jnp.full((Pn, blk), INF, jnp.float32)
+        .at[shard.slot_owner, shard.slot_dstl].min(v))(send_val)
+
+
+@phases.register("send", "xla")
+def _phase_send_xla(shard: SsspShards, dist, pruned, last_sent, *,
+                    dense: bool, cfg: SsspConfig):
+    """Generic XLA pack: per-slot ``segment_min`` + improvement masking.
 
     Returns (payload [K, P, C] (bucket) or [K, P, block] (dense),
     last_sent' [K, S], sends [K])."""
@@ -165,34 +202,78 @@ def _phase_send(shard: SsspShards, dist, pruned, last_sent, cfg: SsspConfig):
     new_last = jnp.where(improved, slot_val, last_sent)
     sends = jnp.sum(improved, axis=-1).astype(jnp.int32)           # [K]
 
-    if cfg.exchange == "bucket":
-        scatter = jax.vmap(
-            lambda v: jnp.full((Pn, C), INF, jnp.float32)
-            .at[shard.slot_owner, shard.slot_pos].min(v))
-    else:  # dense candidate vector addressed by (owner, dst_local)
-        blk = dist.shape[1]
-        scatter = jax.vmap(
-            lambda v: jnp.full((Pn, blk), INF, jnp.float32)
-            .at[shard.slot_owner, shard.slot_dstl].min(v))
-    return scatter(send_val), new_last, sends
-
-
-def _phase_merge(shard: SsspShards, dist, incoming, cfg: SsspConfig):
-    """Scatter-min incoming messages into the local block, per query.
-
-    ``incoming``: [K, P, C] (bucket) or [K, block] (dense)."""
-    nq = dist.shape[0]
-    if cfg.exchange == "bucket":
-        flat_val = incoming.reshape(nq, -1)
-        flat_idx = shard.recv_idx.reshape(-1)   # sentinel = block -> dropped
-        new = jax.vmap(
-            lambda d, v: d.at[flat_idx].min(v, mode="drop"))(dist, flat_val)
-        recvs = jnp.sum(jnp.isfinite(flat_val), axis=-1).astype(jnp.int32)
+    if dense:
+        payload = _scatter_dense(shard, send_val, dist.shape[1])
     else:
-        new = jnp.minimum(dist, incoming)
-        recvs = jnp.sum(incoming < dist, axis=-1).astype(jnp.int32)
-    new_active = new < dist
-    return new, new_active, recvs
+        payload = jax.vmap(
+            lambda v: jnp.full((Pn, C), INF, jnp.float32)
+            .at[shard.slot_owner, shard.slot_pos].min(v))(send_val)
+    return payload, new_last, sends
+
+
+@phases.register("send", "pallas")
+def _phase_send_pallas(shard: SsspShards, dist, pruned, last_sent, *,
+                       dense: bool, cfg: SsspConfig):
+    """Slot-tiled Pallas pack (``kernels/send``): the segment-min, the
+    ``last_sent`` improvement masking, and the send counts all run in ONE
+    kernel over the ``tx_*`` layout precomputed by ``build_shards``; the
+    bucketed payload scatter becomes a static gather (``tx_payload_slot``).
+    Bit-identical to the XLA backend (min is exact; same per-edge sums)."""
+    e_loc = shard.loc_src.shape[0]
+    src_t, w_t, segrel_t, eid_t = shard.send_layout
+    pruned_t = jnp.take(pruned[e_loc:].astype(jnp.int32), eid_t,
+                        mode="fill", fill_value=0)
+    send_val, new_last, sends = send_pack_pallas(
+        dist, last_sent, shard.slot_valid, src_t, w_t, segrel_t, pruned_t,
+        sb=shard.tx_sb, eb=shard.tx_eb, interpret=cfg.pallas_interpret)
+    if dense:
+        payload = _scatter_dense(shard, send_val, dist.shape[1])
+    else:
+        payload = send_payload_bucket(send_val, shard.tx_payload_slot)
+    return payload, new_last, sends
+
+
+def _merge_dense(dist, incoming):
+    """Dense incoming is already owner-addressed: elementwise min, no
+    scatter exists for a kernel to replace (shared by both backends)."""
+    new = jnp.minimum(dist, incoming)
+    recvs = jnp.sum(incoming < dist, axis=-1).astype(jnp.int32)
+    return new, new < dist, recvs
+
+
+@phases.register("merge", "xla")
+def _phase_merge_xla(shard: SsspShards, dist, incoming, *, dense: bool,
+                     cfg: SsspConfig):
+    """Generic XLA scatter-min of incoming messages, per query.
+
+    ``incoming``: [K, P, C] (bucket) or [K, block] (dense). Returns
+    (new_dist [K, block], new_active [K, block], recvs [K])."""
+    if dense:
+        return _merge_dense(dist, incoming)
+    nq = dist.shape[0]
+    flat_val = incoming.reshape(nq, -1)
+    flat_idx = shard.recv_idx.reshape(-1)   # sentinel = block -> dropped
+    new = jax.vmap(
+        lambda d, v: d.at[flat_idx].min(v, mode="drop"))(dist, flat_val)
+    recvs = jnp.sum(jnp.isfinite(flat_val), axis=-1).astype(jnp.int32)
+    return new, new < dist, recvs
+
+
+@phases.register("merge", "pallas")
+def _phase_merge_pallas(shard: SsspShards, dist, incoming, *, dense: bool,
+                        cfg: SsspConfig):
+    """Msg-tiled Pallas scatter (``kernels/merge``) over the static ``mx_*``
+    routing layout: scatter-min, next-frontier, and receive counts in ONE
+    kernel. Receive counting is bit-identical to the XLA backend because a
+    payload position outside the layout (``recv_idx`` sentinel) can only
+    ever carry +inf — no sender owns a slot for it."""
+    if dense:
+        return _merge_dense(dist, incoming)
+    nq = dist.shape[0]
+    mx_pos, mx_dstrel, mx_valid = shard.merge_layout
+    return merge_scatter_pallas(
+        dist, incoming.reshape(nq, -1), mx_pos, mx_dstrel, mx_valid,
+        vb=shard.mx_vb, eb=shard.mx_eb, interpret=cfg.pallas_interpret)
 
 
 # --------------------------------------------------------------------------
@@ -212,18 +293,18 @@ class ShmapComm:
     def rank(self):
         return flat_rank(self.axes)
 
-    def exchange(self, payload, cfg: SsspConfig):
-        if cfg.exchange == "bucket":
-            recv = all_to_all_tiled(jnp.swapaxes(payload, 0, 1), self.axes)
-            return jnp.swapaxes(recv, 0, 1)                      # [K, P, C]
-        if cfg.exchange == "pmin":
-            merged = lax.pmin(payload, self.axes)                # [K, P, block]
-            return lax.dynamic_index_in_dim(merged, self.rank(), 1,
-                                            keepdims=False)      # [K, block]
-        if cfg.exchange == "a2a_dense":
-            recv = all_to_all_tiled(jnp.swapaxes(payload, 0, 1), self.axes)
-            return jnp.min(recv, axis=0)                         # [K, block]
-        raise ValueError(cfg.exchange)
+    def exchange_bucket(self, payload):
+        recv = all_to_all_tiled(jnp.swapaxes(payload, 0, 1), self.axes)
+        return jnp.swapaxes(recv, 0, 1)                          # [K, P, C]
+
+    def exchange_pmin(self, payload):
+        merged = lax.pmin(payload, self.axes)                    # [K, P, block]
+        return lax.dynamic_index_in_dim(merged, self.rank(), 1,
+                                        keepdims=False)          # [K, block]
+
+    def exchange_a2a_dense(self, payload):
+        recv = all_to_all_tiled(jnp.swapaxes(payload, 0, 1), self.axes)
+        return jnp.min(recv, axis=0)                             # [K, block]
 
     def ring(self, tok):
         return ring_permute(tok, self.axes)
@@ -250,12 +331,15 @@ class SimComm:
     def rank(self):
         return jnp.arange(self.P, dtype=jnp.int32)
 
-    def exchange(self, payload, cfg: SsspConfig):
-        # payload: [P_src, K, P_dst, *] stacked over senders
-        if cfg.exchange == "bucket":
-            return jnp.swapaxes(payload, 0, 2)            # [P_dst, K, P_src, C]
+    # payload: [P_src, K, P_dst, *] stacked over senders
+    def exchange_bucket(self, payload):
+        return jnp.swapaxes(payload, 0, 2)            # [P_dst, K, P_src, C]
+
+    def exchange_pmin(self, payload):
         # dense: [P_src, K, P_owner, block] -> per-owner min over senders
         return jnp.swapaxes(jnp.min(payload, axis=0), 0, 1)  # [P_owner, K, block]
+
+    exchange_a2a_dense = exchange_pmin  # same single-device realization
 
     def ring(self, tok):
         return jax.tree_util.tree_map(lambda x: jnp.roll(x, 1, axis=0), tok)
@@ -271,8 +355,26 @@ class SimComm:
 
 
 # --------------------------------------------------------------------------
-# round + termination (shared logic, comm-parameterized)
+# exchange + termination stages (comm-parameterized)
 # --------------------------------------------------------------------------
+
+class ExchangeStage(NamedTuple):
+    """Registry entry for an exchange mode: ``dense`` selects the payload
+    shape the send/merge stages build/consume ([K, P, block] vs the
+    bucketed [K, P, C]); ``run(comm, payload)`` realizes the transfer on
+    either comm backend."""
+    name: str
+    dense: bool
+    run: Any
+
+
+phases.register("exchange", "bucket")(ExchangeStage(
+    "bucket", dense=False, run=lambda comm, p: comm.exchange_bucket(p)))
+phases.register("exchange", "pmin")(ExchangeStage(
+    "pmin", dense=True, run=lambda comm, p: comm.exchange_pmin(p)))
+phases.register("exchange", "a2a_dense")(ExchangeStage(
+    "a2a_dense", dense=True, run=lambda comm, p: comm.exchange_a2a_dense(p)))
+
 
 def _vcall(fn, vmapped, *args, in_axes=0):
     """vmap ``fn`` over the query axis (always) and the shard axis (sim)."""
@@ -282,43 +384,108 @@ def _vcall(fn, vmapped, *args, in_axes=0):
     return f(*args)
 
 
-def _toka_done(cfg, comm, carry, new_active, sends, recvs, inter_edges, n_parts,
-               rank, vmapped: bool):
-    """Per-query termination: every detector runs K independent instances
-    (toka2 circulates K tokens in the same ring hop). Returns ([K] done
-    mask, toka2')."""
+def _quiescent(comm, new_active):
+    """Globally-agreed [K] mask: no shard has a live frontier for query k."""
     idle = ~jnp.any(new_active, axis=-1)            # [K] (or [P, K] in sim)
-    quiescent = comm.all_all(idle)
-    if cfg.toka == "toka0":
-        return quiescent, carry.toka2
-    if cfg.toka == "toka1":
-        ie = inter_edges[:, None] if vmapped else inter_edges
-        vote = toka_mod.toka1_vote(carry.msg_count + recvs, ie, n_parts)
-        return quiescent | comm.all_all(vote), carry.toka2
-    if cfg.toka == "toka2":
-        # Safra's counter invariant (sum of sent-received returns to 0)
-        # only holds for message transports. The dense exchanges (pmin /
-        # a2a_dense) are broadcasts — a sent improvement is not 1:1 with a
-        # counted receive — so they run the color-only DFG variant
-        # (counters zeroed; sound under BSP where nothing is in flight at
-        # round boundaries). Found by the §Perf study: with counters, the
-        # ring never observes a zero sum and toka2 spins to max_rounds.
-        if cfg.exchange == "bucket":
-            acct = _vcall(toka_mod.toka2_account, vmapped, carry.toka2,
-                          sends, recvs)
-        else:
-            zero = jnp.zeros_like(sends)
-            acct = _vcall(toka_mod.toka2_account, vmapped, carry.toka2,
-                          zero, zero)
-            # blacken on send still applies (color drives termination)
-            color = jnp.where(sends > 0, jnp.int32(1), acct.color)
-            acct = acct._replace(color=color)
-        st, outgoing = _vcall(partial(toka_mod.toka2_forward, n_parts=n_parts),
-                              vmapped, acct, rank, idle, in_axes=(0, None, 0))
-        incoming = comm.ring(outgoing)
-        st = _vcall(toka_mod.toka2_absorb, vmapped, st, incoming)
-        return comm.all_all(st.seen_red), st
-    raise ValueError(cfg.toka)
+    return comm.all_all(idle), idle
+
+
+# Per-query termination stages: every detector runs K independent instances
+# (toka2 circulates K tokens in the same ring hop). Uniform signature
+# returning ([K] done mask, toka2').
+
+@phases.register("toka", "toka0")
+def _toka0_stage(cfg, comm, carry, new_active, sends, recvs, inter_edges,
+                 n_parts, rank, vmapped: bool):
+    quiescent, _ = _quiescent(comm, new_active)
+    return quiescent, carry.toka2
+
+
+@phases.register("toka", "toka1")
+def _toka1_stage(cfg, comm, carry, new_active, sends, recvs, inter_edges,
+                 n_parts, rank, vmapped: bool):
+    quiescent, _ = _quiescent(comm, new_active)
+    ie = inter_edges[:, None] if vmapped else inter_edges
+    vote = toka_mod.toka1_vote(carry.msg_count + recvs, ie, n_parts)
+    return quiescent | comm.all_all(vote), carry.toka2
+
+
+@phases.register("toka", "toka2")
+def _toka2_stage(cfg, comm, carry, new_active, sends, recvs, inter_edges,
+                 n_parts, rank, vmapped: bool):
+    # Safra's counter invariant (sum of sent-received returns to 0)
+    # only holds for message transports. The dense exchanges (pmin /
+    # a2a_dense) are broadcasts — a sent improvement is not 1:1 with a
+    # counted receive — so they run the color-only DFG variant
+    # (counters zeroed; sound under BSP where nothing is in flight at
+    # round boundaries). Found by the §Perf study: with counters, the
+    # ring never observes a zero sum and toka2 spins to max_rounds.
+    _, idle = _quiescent(comm, new_active)
+    if not phases.resolve("exchange", cfg.exchange).dense:
+        acct = _vcall(toka_mod.toka2_account, vmapped, carry.toka2,
+                      sends, recvs)
+    else:
+        zero = jnp.zeros_like(sends)
+        acct = _vcall(toka_mod.toka2_account, vmapped, carry.toka2,
+                      zero, zero)
+        # blacken on send still applies (color drives termination)
+        color = jnp.where(sends > 0, jnp.int32(1), acct.color)
+        acct = acct._replace(color=color)
+    st, outgoing = _vcall(partial(toka_mod.toka2_forward, n_parts=n_parts),
+                          vmapped, acct, rank, idle, in_axes=(0, None, 0))
+    incoming = comm.ring(outgoing)
+    st = _vcall(toka_mod.toka2_absorb, vmapped, st, incoming)
+    return comm.all_all(st.seen_red), st
+
+
+# --------------------------------------------------------------------------
+# pipeline resolution + round
+# --------------------------------------------------------------------------
+
+class RoundPipeline(NamedTuple):
+    """The round's stages, resolved once per (shards, config) from the
+    backend registry. ``local``/``send``/``merge`` are per-shard callables
+    (vmapped by the sim backend, direct under shard_map); ``exchange`` is
+    an :class:`ExchangeStage`; ``toka`` is the termination stage."""
+    local: Any
+    send: Any
+    exchange: ExchangeStage
+    merge: Any
+    toka: Any
+
+
+def build_pipeline(sh: SsspShards, cfg: SsspConfig) -> RoundPipeline:
+    """Resolve every phase backend for these shards.
+
+    Pallas send/merge backends need the ``tx_*``/``mx_*`` layouts from
+    ``build_shards``; when absent (``comm_layout=False``) they degrade to
+    the XLA backends with a one-time warning, mirroring the pallas local
+    solver's ``relax_layout`` rule."""
+    ex = phases.resolve("exchange", cfg.exchange)
+    send_backend = cfg.send_backend
+    if send_backend == "pallas" and not sh.has_send_layout:
+        phases.warn_once(
+            "send.pallas.no_layout",
+            "send_backend='pallas' falling back to 'xla': the shards carry "
+            "no slot-tiled cut-edge layout (build_shards was called with "
+            "comm_layout=False)")
+        send_backend = "xla"
+    merge_backend = cfg.merge_backend
+    if merge_backend == "pallas" and not sh.has_merge_layout:
+        phases.warn_once(
+            "merge.pallas.no_layout",
+            "merge_backend='pallas' falling back to 'xla': the shards carry "
+            "no msg-tiled receive layout (build_shards was called with "
+            "comm_layout=False)")
+        merge_backend = "xla"
+    return RoundPipeline(
+        local=partial(_phase_local, cfg=cfg),
+        send=partial(phases.resolve("send", send_backend),
+                     dense=ex.dense, cfg=cfg),
+        exchange=ex,
+        merge=partial(phases.resolve("merge", merge_backend),
+                      dense=ex.dense, cfg=cfg),
+        toka=phases.resolve("toka", cfg.toka))
 
 
 def _make_round(shard_or_stack: SsspShards, cfg: SsspConfig, comm, vmapped: bool,
@@ -329,10 +496,9 @@ def _make_round(shard_or_stack: SsspShards, cfg: SsspConfig, comm, vmapped: bool
     ``vmapped=False``: phases run directly on a single shard's slice
     (inside shard_map)."""
     sh = shard_or_stack
+    pipe = build_pipeline(sh, cfg)
 
-    local_f = partial(_phase_local, cfg=cfg)
-    send_f = partial(_phase_send, cfg=cfg)
-    merge_f = partial(_phase_merge, cfg=cfg)
+    local_f, send_f, merge_f = pipe.local, pipe.send, pipe.merge
     if vmapped:
         local_f = jax.vmap(local_f)
         send_f = jax.vmap(send_f)
@@ -345,10 +511,10 @@ def _make_round(shard_or_stack: SsspShards, cfg: SsspConfig, comm, vmapped: bool
         dist, pruned, cursor, nrel, nprune = local_f(
             sh, carry.dist, act, carry.pruned, carry.tri_cursor)
         payload, last_sent, sends = send_f(sh, dist, pruned, carry.last_sent)
-        incoming = comm.exchange(payload, cfg)
+        incoming = pipe.exchange.run(comm, payload)
         dist, new_active, recvs = merge_f(sh, dist, incoming)
-        done, toka2 = _toka_done(cfg, comm, carry, new_active, sends, recvs,
-                                 sh.inter_edges, n_parts, comm.rank(), vmapped)
+        done, toka2 = pipe.toka(cfg, comm, carry, new_active, sends, recvs,
+                                sh.inter_edges, n_parts, comm.rank(), vmapped)
         running = (~carry.done).astype(jnp.int32)
         return _Carry(
             dist=dist, active=new_active, pruned=pruned, tri_cursor=cursor,
@@ -360,6 +526,26 @@ def _make_round(shard_or_stack: SsspShards, cfg: SsspConfig, comm, vmapped: bool
             msgs_recv=carry.msgs_recv + recvs.astype(jnp.int32))
 
     return rounds_fn
+
+
+def sim_phase_fns(sh: SsspShards, cfg: SsspConfig):
+    """Jitted per-phase callables over the stacked sim representation —
+    the per-phase attribution hook for benchmarks: each phase of the round
+    (local / send / exchange / merge) can be driven and timed in isolation
+    on real mid-solve state. Shapes follow the sim carry convention
+    (leading [P], then [K])."""
+    comm = SimComm(sh.n_parts)
+    pipe = build_pipeline(sh, cfg)
+    return {
+        "local": jax.jit(lambda dist, active, pruned, cursor:
+                         jax.vmap(pipe.local)(sh, dist, active, pruned,
+                                              cursor)),
+        "send": jax.jit(lambda dist, pruned, last_sent:
+                        jax.vmap(pipe.send)(sh, dist, pruned, last_sent)),
+        "exchange": jax.jit(lambda payload: pipe.exchange.run(comm, payload)),
+        "merge": jax.jit(lambda dist, incoming:
+                         jax.vmap(pipe.merge)(sh, dist, incoming)),
+    }
 
 
 def _toka2_init_batch(rank, nq: int):

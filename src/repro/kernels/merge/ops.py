@@ -1,0 +1,75 @@
+"""jit'd wrappers + host-side msg-tiled layout builder for the merge kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.merge.merge import merge_scatter_tiled
+
+INF = float("inf")
+
+
+def build_msg_tiled_layout(recv_idx, block: int, *, vb: int = 128,
+                           eb: int = 512):
+    """One-time host preprocessing: the static receive routing table
+    ``recv_idx`` [P, C] (local vertex addressed by (sender, bucket pos);
+    sentinel >= block = no message) -> flat message positions grouped by
+    destination vertex tile.
+
+    Returns (pos_t, dstrel_t, valid_t, block_pad), each layout array
+    [n_vtiles, n_chunks, EB]: ``pos_t`` indexes the FLATTENED [P*C]
+    incoming buffer, ``dstrel_t`` is the destination slot within its tile,
+    ``valid_t`` masks padding (no weight plane exists to carry +inf here,
+    unlike the edge layouts)."""
+    ridx = np.asarray(recv_idx, np.int64).reshape(-1)
+    pos = np.arange(ridx.shape[0], dtype=np.int64)
+    keep = ridx < block
+    ridx, pos = ridx[keep], pos[keep]
+
+    n_vtiles = max(-(-block // vb), 1)
+    block_pad = n_vtiles * vb
+    order = np.argsort(ridx, kind="stable")
+    ridx, pos = ridx[order], pos[order]
+    tile_of = ridx // vb
+    counts = np.bincount(tile_of, minlength=n_vtiles)
+    n_chunks = max(int(-(-counts.max() // eb)) if counts.size else 1, 1)
+
+    pos_t = np.zeros((n_vtiles, n_chunks * eb), np.int64)
+    dstrel_t = np.zeros((n_vtiles, n_chunks * eb), np.int64)
+    valid_t = np.zeros((n_vtiles, n_chunks * eb), np.int64)
+    starts = np.zeros(n_vtiles + 1, np.int64)
+    starts[1:] = np.cumsum(counts)
+    for t in range(n_vtiles):
+        lo, hi = starts[t], starts[t + 1]
+        k = hi - lo
+        pos_t[t, :k] = pos[lo:hi]
+        dstrel_t[t, :k] = ridx[lo:hi] - t * vb
+        valid_t[t, :k] = 1
+
+    shape3 = (n_vtiles, n_chunks, eb)
+    return (jnp.asarray(pos_t.reshape(shape3), jnp.int32),
+            jnp.asarray(dstrel_t.reshape(shape3), jnp.int32),
+            jnp.asarray(valid_t.reshape(shape3), jnp.int32),
+            block_pad)
+
+
+@partial(jax.jit, static_argnames=("vb", "eb", "interpret"))
+def merge_scatter_pallas(dist, incoming_flat, pos_t, dstrel_t, valid_t, *,
+                         vb: int = 128, eb: int = 512,
+                         interpret: bool = True):
+    """Solver-facing wrapper: pads to kernel tile shapes, slices back.
+
+    dist: [K, block]; incoming_flat: [K, M] flattened bucketed messages.
+    Returns (new_dist [K, block], new_active [K, block] bool,
+    recvs [K] i32)."""
+    n_vtiles = pos_t.shape[0]
+    nq, block = dist.shape
+    bp = n_vtiles * vb
+    dist_pad = jnp.full((nq, bp), INF).at[:, :block].set(dist)
+    new, front, recvs = merge_scatter_tiled(
+        dist_pad, incoming_flat, pos_t, dstrel_t, valid_t, vb=vb, eb=eb,
+        interpret=interpret)
+    return new[:, :block], front[:, :block] > 0, recvs

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the merge-phase scatter-min.
+
+Per query: new[v] = min(dist[v], min over flat positions m with
+idx[m] == v of incoming[m]); improved vertices are the next frontier.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def merge_scatter_ref(dist, incoming_flat, flat_idx):
+    """dist: [K, block]; incoming_flat: [K, M] f32; flat_idx: [M] int32
+    (sentinel >= block = dropped). Returns (new_dist [K, block],
+    new_active [K, block] bool, recvs [K] i32 — finite incoming)."""
+    new = jax.vmap(
+        lambda d, v: d.at[flat_idx].min(v, mode="drop"))(dist, incoming_flat)
+    recvs = jnp.sum(jnp.isfinite(incoming_flat), axis=-1).astype(jnp.int32)
+    return new, new < dist, recvs

@@ -62,6 +62,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.tile_reduce import tile_min
+
 INF = float("inf")
 
 
@@ -118,11 +120,9 @@ def _edge_chunk(src_ref, w_ref, dstrel_ref, pruned_ref):
 
 
 def _tile_min(cand, dstrel, *, vb: int):
-    """[EB] candidates -> [VB] per-destination minima (one-hot reduce)."""
-    eb = cand.shape[0]
-    lane = jax.lax.broadcasted_iota(jnp.int32, (eb, vb), 1)
-    onehot = dstrel[:, None] == lane
-    return jnp.min(jnp.where(onehot, cand[:, None], INF), axis=0)
+    """[EB] candidates -> [VB] per-destination minima (shared one-hot
+    reduce from ``kernels/tile_reduce``)."""
+    return tile_min(cand, dstrel, width=vb)
 
 
 def _relax_masked_kernel(dist_ref, front_ref, src_ref, w_ref, dstrel_ref,

@@ -1,0 +1,4 @@
+from repro.kernels.send.ops import (
+    build_slot_tiled_layout, send_pack_pallas, send_payload_bucket,
+)
+from repro.kernels.send.ref import send_pack_ref

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the send-phase segment-min pack.
+
+Per query: slot_val[s] = min over cut edges e with seg[e] == s of
+(dist[src[e]] + w[e]); only improvements over last_sent transmit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.float32(jnp.inf)
+
+
+def send_pack_ref(dist, cut_src, cut_w, cut_seg, n_slots, slot_valid,
+                  last_sent):
+    """dist: [K, block]; cut_src/cut_w/cut_seg: [e_cut] (seg sorted,
+    padding w = +inf); slot_valid: [S] bool; last_sent: [K, S].
+    Returns (send_val [K, S] — INF where not improved, new_last [K, S],
+    sends [K] i32)."""
+    d_src = jnp.take(dist, cut_src, axis=1, mode="fill",
+                     fill_value=float("inf"))
+    cand = d_src + cut_w
+    slot_val = jax.vmap(lambda c: jax.ops.segment_min(
+        c, cut_seg, num_segments=n_slots, indices_are_sorted=True))(cand)
+    improved = slot_valid & (slot_val < last_sent)
+    send_val = jnp.where(improved, slot_val, INF)
+    new_last = jnp.where(improved, slot_val, last_sent)
+    sends = jnp.sum(improved, axis=-1).astype(jnp.int32)
+    return send_val, new_last, sends

@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: send-phase segment-min pack (SP-Async boundary send).
+
+The send phase reduces every shard's cut-edge candidates ``dist[src] + w``
+to ONE value per message slot (a slot = a unique boundary pair
+``(dst_owner, dst_local)``), masks the result against ``last_sent`` so only
+improvements transmit, and counts the sends. The XLA realization is a
+``segment_min`` — a sorted scatter with no efficient TPU lowering (the
+same gap the relax kernel closed for the local phase).
+
+TPU adaptation, following ``kernels/relax``'s dst-tiled pattern with the
+SLOT axis in the destination role: cut edges are pre-grouped by slot tile
+(host-side, one-time — the grouping is as static as the message routing
+itself) into ``[n_stiles, n_chunks, EB]`` arrays, and each grid step
+produces one SB-wide slot tile via the one-hot masked min-reduce (pure VPU
+work). The source-distance gather is the same 1-D dynamic gather from the
+VMEM-resident distance row the relax kernel uses.
+
+Grid ``(n_stiles, n_chunks, K)`` with the query axis INNERMOST: the edge
+chunk fetched for ``(tile, chunk)`` is reused by all K queries before the
+next chunk streams in. Because the grid iterates the chunk axis before the
+query axis, all chunks of tile ``i`` for query ``q`` are complete at
+``j == n_chunks - 1``, so the improvement mask against ``last_sent``, the
+``last_sent`` update, and the per-query send count all happen in-kernel at
+tile finalization — the kernel emits exactly what the solver's send phase
+needs, not a partial reduction.
+
+VMEM working set per step:
+  dist rows                 4 * K * block_pad
+  last_sent / send_val / new_last rows   12 * K * S_pad
+  edge chunk (src, w, segrel, pruned)    ~16 * EB
+  one-hot tile              4 * EB * SB   (dominant; 512*128*4 = 256 KiB)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.tile_reduce import tile_min
+
+INF = float("inf")
+
+
+def _send_pack_kernel(dist_ref, last_ref, valid_ref, src_ref, w_ref,
+                      segrel_ref, pruned_ref, val_ref, newlast_ref, sends_ref,
+                      count_ref, *, sb: int, n_stiles: int, n_chunks: int,
+                      n_queries: int):
+    """Grid (slot tile i, edge chunk j, query q) — q innermost.
+
+    ``val_ref`` accumulates raw per-slot minima while tile (i, q) streams
+    its chunks; at the tile's last chunk it is rewritten in place as the
+    masked send value (INF where no improvement) and ``newlast_ref`` /
+    ``count_ref`` are updated. SMEM ``count_ref`` holds the per-query send
+    counters."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    q = pl.program_id(2)
+    first = (i == 0) & (j == 0) & (q == 0)
+    last = ((i == n_stiles - 1) & (j == n_chunks - 1)
+            & (q == n_queries - 1))
+    qrow = pl.dslice(q, 1)
+    tile = pl.dslice(i * sb, sb)
+
+    @pl.when(first)
+    def _init_counts():
+        for k in range(n_queries):
+            count_ref[k] = 0
+
+    @pl.when(j == 0)
+    def _init_tile():
+        val_ref[qrow, tile] = jnp.full((1, sb), INF, jnp.float32)
+
+    # accumulate this chunk's candidates into the slot tile
+    src = src_ref[0, 0, :]                    # [EB] int32 (padding = 0)
+    w = jnp.where(pruned_ref[0, 0, :] > 0, INF, w_ref[0, 0, :])
+    segrel = segrel_ref[0, 0, :]              # [EB] int32 in [0, sb)
+    d_src = jnp.take(dist_ref[qrow, :][0], src)
+    cand = d_src + w
+    mins = tile_min(cand, segrel, width=sb)
+    val_ref[qrow, tile] = jnp.minimum(val_ref[qrow, tile][0], mins)[None]
+
+    # tile (i, q) complete: improvement mask + last_sent update + count
+    @pl.when(j == n_chunks - 1)
+    def _finalize_tile():
+        val = val_ref[qrow, tile][0]
+        prev = last_ref[qrow, tile][0]
+        valid = valid_ref[tile] > 0
+        improved = valid & (val < prev)
+        val_ref[qrow, tile] = jnp.where(improved, val, INF)[None]
+        newlast_ref[qrow, tile] = jnp.where(improved, val, prev)[None]
+        count_ref[q] = count_ref[q] + jnp.sum(improved).astype(jnp.int32)
+
+    @pl.when(last)
+    def _fin():
+        for k in range(n_queries):
+            sends_ref[k] = count_ref[k]
+
+
+def send_pack_tiled(dist_pad, last_pad, valid_pad, src_t, w_t, segrel_t,
+                    pruned_t, *, sb: int, eb: int, interpret: bool = True):
+    """dist_pad: [K, block_pad] f32; last_pad/valid_pad: [K, S_pad] /
+    [S_pad] with S_pad = n_stiles * sb; src_t/w_t/segrel_t/pruned_t:
+    [n_stiles, n_chunks, EB] slot-tiled cut-edge layout (shared by all K
+    queries). Returns (send_val [K, S_pad] — INF where not improved,
+    new_last [K, S_pad], sends [K] i32)."""
+    n_stiles, n_chunks, eb_l = src_t.shape
+    nq, bp = dist_pad.shape
+    sp = n_stiles * sb
+    assert eb_l == eb and last_pad.shape == (nq, sp)
+    assert valid_pad.shape == (sp,)
+
+    grid = (n_stiles, n_chunks, nq)
+    dist_spec = pl.BlockSpec((nq, bp), lambda i, j, q: (0, 0))
+    slot_spec = pl.BlockSpec((nq, sp), lambda i, j, q: (0, 0))
+    edge_spec = pl.BlockSpec((1, 1, eb), lambda i, j, q: (i, j, 0))
+    kernel = functools.partial(_send_pack_kernel, sb=sb, n_stiles=n_stiles,
+                               n_chunks=n_chunks, n_queries=nq)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            dist_spec,
+            slot_spec,
+            pl.BlockSpec((sp,), lambda i, j, q: (0,)),
+            edge_spec, edge_spec, edge_spec, edge_spec,
+        ],
+        out_specs=[
+            slot_spec,                                     # masked send values
+            slot_spec,                                     # updated last_sent
+            pl.BlockSpec((nq,), lambda i, j, q: (0,)),     # per-query sends
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, sp), jnp.float32),
+            jax.ShapeDtypeStruct((nq, sp), jnp.float32),
+            jax.ShapeDtypeStruct((nq,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((nq,), jnp.int32)],
+        interpret=interpret,
+    )(dist_pad, last_pad, valid_pad, src_t, w_t, segrel_t, pruned_t)

@@ -1,0 +1,23 @@
+"""Shared VPU primitive for the dst-tiled kernel family.
+
+All three SP-Async kernels (relax, send, merge) end in the same move: a
+chunk of [EB] candidate values, each tagged with a tile-relative target in
+``[0, width)``, reduced to per-target minima with a one-hot masked
+min-reduce — the TPU replacement for a scatter-min. Kept in one place so
+the VMEM-dominant term of every kernel (the [EB, width] one-hot tile) is
+tuned once, not three times.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INF = float("inf")
+
+
+def tile_min(cand, rel, *, width: int):
+    """[EB] candidates -> [width] per-target minima (one-hot reduce)."""
+    eb = cand.shape[0]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (eb, width), 1)
+    onehot = rel[:, None] == lane
+    return jnp.min(jnp.where(onehot, cand[:, None], INF), axis=0)

@@ -48,6 +48,12 @@ def main():
                    choices=["toka0", "toka1", "toka2"])
     p.add_argument("--solver", default="bellman",
                    choices=["bellman", "delta", "pallas"])
+    p.add_argument("--send-backend", default="xla", choices=["xla", "pallas"],
+                   help="cut-edge segment-min pack: XLA or the slot-tiled "
+                        "Pallas kernel")
+    p.add_argument("--merge-backend", default="xla", choices=["xla", "pallas"],
+                   help="incoming scatter-min: XLA or the msg-tiled Pallas "
+                        "kernel")
     p.add_argument("--delta", type=float, default=4.0)
     p.add_argument("--no-prune", action="store_true")
     p.add_argument("--backend", default="sim", choices=["sim", "shmap"])
@@ -83,6 +89,8 @@ def main():
 
     cfg = SsspConfig(exchange=args.exchange, toka=args.toka,
                      local_solver=args.solver, delta=args.delta,
+                     send_backend=args.send_backend,
+                     merge_backend=args.merge_backend,
                      prune_online=not args.no_prune)
     t0 = time.time()
     if args.backend == "sim":
