@@ -15,8 +15,8 @@ import time
 import jax
 import numpy as np
 
-from repro.core import (SsspConfig, build_shards, sim_phase_fns, solve_sim,
-                        solve_sim_batch)
+from repro.core import (SsspConfig, SsspEngine, build_shards, engine_for,
+                        sim_phase_fns, solve_sim, solve_sim_batch)
 from repro.core import sssp as sssp_mod
 from repro.graph import rmat_graph, road_grid_graph, dijkstra_reference
 
@@ -152,6 +152,55 @@ def bench_batch_throughput(out):
                 f"rounds={int(stats.rounds)}")
 
 
+def bench_engine_serving(out):
+    """Serving economics of the session engine: cold compile vs warm query
+    latency, plus sustained queries/s over a streamed arrival trace.
+
+    ``SsspEngine`` keeps sources TRACED, so one compiled program per
+    K-bucket answers arbitrary source sets — the cold/warm gap here IS the
+    compile amortization the engine exists for, and ``recompiles`` in the
+    warm records must stay 0 (asserted by the trace counter, not inferred
+    from timing). The stream section replays a ragged arrival trace
+    (single queries mixed with small bursts) through submit/drain so the
+    bucket coalescing policy is what's measured."""
+    g = BENCH_GRAPHS["graph1-like"]()
+    rng = np.random.default_rng(13)
+    sh = build_shards(g, 8, enumerate_triangles=False)
+    eng = SsspEngine.build(sh, SsspConfig(prune_online=False), max_bucket=16)
+    for k in (1, 4, 16):
+        sources = [int(s) for s in
+                   rng.choice(g.n_vertices, size=k, replace=False)]
+        cold = eng.solve(sources)
+        out(f"engine_serving[cold][K={k}]", cold.wall_s * 1e6,
+            f"compile_s={cold.compile_s:.3f} bucket={cold.bucket_k}")
+        warm_ts, recompiles = [], 0
+        for _ in range(3):
+            res = eng.solve([int(s) for s in
+                             rng.choice(g.n_vertices, size=k, replace=False)])
+            warm_ts.append(res.wall_s)
+            recompiles += int(res.compiled)
+        t = min(warm_ts)
+        out(f"engine_serving[warm][K={k}]", t * 1e6,
+            f"qps={k / t:.3f} recompiles={recompiles} "
+            f"amortization={cold.wall_s / t:.1f}x")
+        assert recompiles == 0, "warm engine.solve must not recompile"
+    # streamed arrival trace: 24 arrivals, ragged sizes 1/2/4, coalesced
+    # into max_bucket batches by drain()
+    trace0, batches0 = eng.trace_count, eng.batches_served
+    handles = []
+    t0 = time.perf_counter()
+    for size in rng.choice([1, 1, 2, 4], size=24):
+        handles.append(eng.submit([int(s) for s in
+                                   rng.choice(g.n_vertices, size=int(size),
+                                              replace=False)]))
+    eng.drain()
+    t = time.perf_counter() - t0
+    nq = sum(len(h.sources) for h in handles)
+    out(f"engine_serving[stream][{nq}q]", t * 1e6,
+        f"qps={nq / t:.3f} batches={eng.batches_served - batches0} "
+        f"recompiles={eng.trace_count - trace0}")
+
+
 def _block(x):
     return jax.tree_util.tree_map(
         lambda a: a.block_until_ready() if hasattr(a, "block_until_ready")
@@ -190,7 +239,7 @@ def bench_phase_breakdown(out):
         for backend in ("xla", "pallas"):
             cfg = SsspConfig(prune_online=False, send_backend=backend,
                              merge_backend=backend)
-            round_fn = sssp_mod._sim_round(sh, cfg)
+            round_fn = engine_for(sh, cfg).round_fn
             carry = sssp_mod._init_carry(sh, sources, cfg, rank=None,
                                          vmapped=True)
             carry = round_fn(round_fn(carry))      # mid-solve state
@@ -221,4 +270,5 @@ def run_all(out):
     bench_local_solver(out)
     bench_pallas_solver(out)
     bench_batch_throughput(out)
+    bench_engine_serving(out)
     bench_phase_breakdown(out)

@@ -1,85 +1,109 @@
-"""Quickstart: solve SSSP with SP-Async on a generated graph and validate.
+"""Quickstart: serve SSSP queries with an SP-Async session engine.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Three modes are shown:
-  1. single-source (the paper's setting) — a K=1 batch under the hood
-  2. batched multi-source — ONE ``build_shards`` (partitioning, message
-     routing, Trishla triangle enumeration, the dst-tiled Pallas edge
-     layout) amortized over K queries that ride the same compiled solve
-  3. the all-Pallas phase pipeline — every phase of the round (local
-     relax, send pack, merge scatter) dispatched to its TPU kernel
-     backend through the registry in ``core/phases.py``
+The public surface is ONE session object, ``SsspEngine``: build it once
+over a graph (partitioning, static message routing, Trishla triangle
+enumeration, the dst-tiled Pallas edge layouts — all amortized), then
+stream queries at it. Sources are a TRACED input, so one compiled program
+per K-bucket (powers of two) answers ARBITRARY source sets — the second
+query batch of a given size never recompiles, on either backend.
 
-The round is a phase PIPELINE: each phase resolves its backend from a
-registry keyed by ``SsspConfig`` (``local_solver``, ``send_backend``,
-``exchange``, ``merge_backend``, ``toka``), so backends compose freely
-and a typo'd name raises ``ValueError`` at config construction — not
-inside tracing. Pallas backends are bit-identical to the XLA ones.
+Four steps are shown:
+  1. build the session (``SsspEngine.build``)
+  2. solve query batches — watch the compile cache: cold once per bucket,
+     then warm for every later batch of that shape
+  3. stream ragged arrivals through ``submit``/``drain`` (coalesced into
+     bucketed batches; a submission is never split)
+  4. the all-Pallas phase pipeline as a second session over the SAME
+     shards — every phase (local relax, send pack, merge scatter)
+     dispatched to its TPU kernel backend, bit-identical to XLA
+
+The legacy free functions (``solve_sim``, ``solve_sim_batch``,
+``solve_shmap``, ``solve_shmap_batch``, ``build_shmap_solver``) still work
+but are deprecated thin wrappers over a cached engine.
 """
 import numpy as np
 
-from repro.core import SsspConfig, build_shards, solve_sim, solve_sim_batch
+from repro.core import SsspConfig, SsspEngine, build_shards
 from repro.graph import rmat_graph, dijkstra_reference
 
 
 def main():
-    # 1. generate a ParMat-style graph (paper §IV.A: weights U[1,20))
+    # 1. generate a ParMat-style graph (paper §IV.A: weights U[1,20)) and
+    #    build the session: partition into 8 shards (paper §III.A: 1-D
+    #    block) plus every static layout queries will reuse.
     g = rmat_graph(scale=10, edge_factor=8, seed=0)
     print(f"graph: {g.n_vertices} vertices, {g.n_edges} edges")
-
-    # 2. partition into 8 shards (paper §III.A: 1-D block). This is the
-    #    expensive one-time step — everything it precomputes (static
-    #    message slots, triangle candidates, the dst-tiled relax layout)
-    #    is reused by EVERY query that follows.
     shards = build_shards(g, n_parts=8)
-
-    # 3a. single-source solve with the full paper pipeline: Trishla pruning
-    #     overlapped on idle shards, intra-shard Dijkstra-order settling,
-    #     bucketed all_to_all exchange, ToKa2 token-ring termination
     cfg = SsspConfig(local_solver="delta", delta=6.0, toka="toka2",
                      prune_online=True)
+    engine = SsspEngine.build(shards, cfg)   # backend="sim"; "shmap" on a mesh
+
+    # 2. solve: a single source is a K=1 batch. The first batch of a bucket
+    #    compiles; every later batch of that shape is warm.
     source = int(g.src[0])
-    dist, stats = solve_sim(shards, source, cfg)
-
+    res = engine.solve(source)
     ref = dijkstra_reference(g, source)
-    ok = np.allclose(dist, ref, rtol=1e-5, atol=1e-4)
+    ok = np.allclose(res.dist[0], ref, rtol=1e-5, atol=1e-4)
     print(f"single-source distances match Dijkstra: {ok}")
-    print(f"rounds={int(stats.rounds)} relaxations={int(stats.relaxations)} "
-          f"messages={int(stats.msgs_sent)} pruned_edges={int(stats.pruned_edges)}")
+    print(f"rounds={int(res.stats.rounds)} "
+          f"relaxations={int(res.stats.relaxations)} "
+          f"cold: wall={res.wall_s:.2f}s (compile {res.compile_s:.2f}s) "
+          f"bucket K={res.bucket_k}")
     assert ok
 
-    # 3b. batched multi-source: K queries in one solve. The send payload
-    #     becomes [K, P, C] but still moves in ONE collective per round
-    #     (memory cost: 4 B x K x P x C per shard — batching multiplies
-    #     payload bytes, not message count); per-query ToKa masks finished
-    #     queries while stragglers run.
-    sources = [int(s) for s in np.random.default_rng(1)
-               .choice(g.n_vertices, size=8, replace=False)]
-    dists, bstats = solve_sim_batch(shards, sources, cfg)
-
-    # 4. validate every query against heap Dijkstra
-    ok = all(np.allclose(dists[k], dijkstra_reference(g, s), rtol=1e-5,
+    # multi-source: 6 queries pad up to the K=8 bucket; padded rows start
+    # converged and never relax, send, or count in any statistic. The
+    # [K, P, C] payload still moves in ONE collective per round.
+    rng = np.random.default_rng(1)
+    sources = [int(s) for s in rng.choice(g.n_vertices, size=6, replace=False)]
+    batch = engine.solve(sources)
+    ok = all(np.allclose(batch.dist[k], dijkstra_reference(g, s), rtol=1e-5,
                          atol=1e-4) for k, s in enumerate(sources))
-    print(f"batched distances match Dijkstra ({len(sources)} queries): {ok}")
-    print(f"rounds={int(bstats.rounds)} (slowest query) "
-          f"per-query rounds={np.asarray(bstats.q_rounds).tolist()} "
-          f"relaxations={np.asarray(bstats.q_relaxations).tolist()}")
+    print(f"batched distances match Dijkstra ({len(sources)} queries, "
+          f"bucket K={batch.bucket_k}): {ok}")
+    print(f"per-query rounds={batch.q_rounds.tolist()} "
+          f"relaxations={batch.q_relaxations.tolist()}")
     assert ok
 
-    # 5. the all-Pallas pipeline: the relax kernel settles each shard,
-    #     the slot-tiled send kernel packs the [K, P, C] payload, and the
-    #     msg-tiled merge kernel scatters incoming messages — all over
-    #     layouts step 2 precomputed (tx_*/mx_* next to rx_*). Interpret
-    #     mode runs the kernels on CPU; set pallas_interpret=False on TPU.
-    kcfg = SsspConfig(local_solver="pallas", send_backend="pallas",
-                      merge_backend="pallas", toka="toka2")
-    kdists, kstats = solve_sim_batch(shards, sources, kcfg)
-    xcfg = SsspConfig(local_solver="pallas", toka="toka2")  # xla send/merge
-    xdists, _ = solve_sim_batch(shards, sources, xcfg)
-    identical = bool(np.array_equal(np.asarray(kdists), np.asarray(xdists)))
+    # same bucket, new sources -> NO recompile (sources are traced inputs)
+    warm = engine.solve([int(s) for s in
+                         rng.choice(g.n_vertices, size=8, replace=False)])
+    print(f"warm solve, same bucket: compiled={warm.compiled} "
+          f"wall={warm.wall_s:.3f}s "
+          f"({batch.wall_s / warm.wall_s:.0f}x faster than that bucket's "
+          f"cold solve)")
+    assert not warm.compiled
+    print(f"compiled programs by bucket: {engine.trace_counts}")
+
+    # 3. streaming arrivals: submit now, drain coalesces into bucketed
+    #    batches (here 1+2+1 queries ride one K=4 program together).
+    h1 = engine.submit(source)
+    h2 = engine.submit(sources[:2])
+    h3 = engine.submit(sources[2])
+    engine.drain()
+    ok = np.allclose(h1.result().dist[0], ref, rtol=1e-5, atol=1e-4)
+    print(f"streamed queries: {ok}; h2 rode bucket "
+          f"K={h2.result().bucket_k} with {len(h2.sources)} sources")
+    assert ok
+
+    # 4. the all-Pallas pipeline as a second session over the SAME shards:
+    #    relax kernel settles each shard, the slot-tiled send kernel packs
+    #    the payload, the msg-tiled merge kernel scatters incoming — over
+    #    layouts build_shards precomputed (tx_*/mx_* next to rx_*).
+    #    Interpret mode runs the kernels on CPU; pallas_interpret=False on
+    #    real TPUs. Bit-identical to the XLA backends.
+    kengine = SsspEngine.build(shards, SsspConfig(
+        local_solver="pallas", send_backend="pallas", merge_backend="pallas",
+        toka="toka2"))
+    xengine = SsspEngine.build(shards, SsspConfig(
+        local_solver="pallas", toka="toka2"))          # xla send/merge
+    kres = kengine.solve(sources)
+    xres = xengine.solve(sources)
+    identical = bool(np.array_equal(kres.dist, xres.dist))
     print(f"pallas send/merge bit-identical to the XLA backends: "
-          f"{identical}; rounds={int(kstats.rounds)}")
+          f"{identical}; rounds={int(kres.stats.rounds)}")
     assert identical
 
 

@@ -1,0 +1,365 @@
+"""Session-oriented SSSP query engine: build once, stream queries.
+
+The ROADMAP's serving story made concrete: ``SsspEngine`` is the ONE public
+surface over the SP-Async solver. It owns the partitioned shards, the
+resolved :class:`~repro.core.sssp.RoundPipeline`, and a per-engine compile
+cache, replacing five free functions with divergent signatures
+(``solve_sim`` / ``solve_sim_batch`` / ``solve_shmap`` /
+``solve_shmap_batch`` / ``build_shmap_solver`` — now thin deprecated
+wrappers that delegate here).
+
+    eng = SsspEngine.build(graph_or_shards, cfg, backend="sim")
+    res = eng.solve([3, 17, 1999])        # QueryResult
+    h = eng.submit(42); eng.submit([7, 9])
+    eng.drain()                           # coalesced, bucketed batches
+    h.result().dist
+
+Compile reuse — the engine's core contract
+------------------------------------------
+
+``sources`` is a TRACED input on both backends (scattered inside the
+program by ``_init_carry``, never baked into the trace), so one compiled
+program per (K-bucket, cfg) serves ARBITRARY source sets. ``solve`` pads
+any batch up to the next power-of-two bucket: padded rows start with an
+empty frontier and ``done=True``, so they never relax, send, or count in
+any statistic — padded-bucket results are bit-identical to the unpadded
+solve (queries are independent along the vmapped/batched query axis). The
+per-source launch overhead that dominates GPU/MPI Dijkstra once the graph
+is resident (arXiv:2504.03667) is paid once per bucket shape, not once per
+query batch; this is what the old shmap path got wrong (a fresh XLA
+compile per ``solve_shmap_batch`` call, sources baked into the body).
+
+Trace accounting is first-class: every trace of the round (sim) or the
+whole-solve program (shmap) bumps ``engine.trace_counts[K]`` — the compile
+-reuse tests and the ``engine_serving`` benchmark assert on it directly.
+
+Streaming arrivals
+------------------
+
+``submit`` enqueues a query (or query batch) and returns a
+:class:`QueryHandle`; ``drain`` coalesces everything pending into
+bucketed batches of at most ``max_bucket`` queries (whole handles are
+never split across batches) and solves them. ``handle.result()`` drains
+on demand, so a caller may also just submit and ask.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.core.shards import SsspShards, build_shards
+from repro.core.sssp import (SimComm, SsspConfig, SsspStats, _as_sources,
+                             _init_carry, _make_round,
+                             build_shmap_solver_traced)
+
+
+def bucket_k(k: int) -> int:
+    """Bucket policy: the next power of two >= k (so at most 2x padding,
+    and a stream of ragged batch sizes folds onto O(log K) compiled
+    programs)."""
+    if k < 1:
+        raise ValueError("at least one source is required")
+    return 1 << (k - 1).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryResult:
+    """Structured result of one solved (sub)batch.
+
+    ``dist``/``q_rounds``/``q_relaxations`` are views over the REAL queries
+    (padded bucket rows already sliced away); ``stats`` carries the same
+    per-query columns plus the aggregate totals. ``compile_s`` is the
+    cold-start cost (first invocation of this bucket's program, tracing and
+    XLA compilation included) and is 0.0 on warm calls."""
+
+    dist: np.ndarray            # [K, n_vertices] per-query distances
+    sources: tuple              # the K query sources, as submitted
+    stats: SsspStats            # aggregates + per-query q_rounds/q_relaxations
+    bucket_k: int               # compiled batch shape this solve rode on
+    backend: str                # "sim" | "shmap"
+    wall_s: float               # end-to-end solve wall time
+    compile_s: float            # cold-start time (0.0 when warm)
+    compiled: bool              # True iff this call traced a new program
+
+    @property
+    def q_rounds(self) -> np.ndarray:
+        return np.asarray(self.stats.q_rounds)
+
+    @property
+    def q_relaxations(self) -> np.ndarray:
+        return np.asarray(self.stats.q_relaxations)
+
+
+class QueryHandle:
+    """A submitted-but-possibly-unsolved query batch; ``result()`` drains
+    the owning engine on demand."""
+
+    __slots__ = ("sources", "_engine", "_result")
+
+    def __init__(self, engine: "SsspEngine", sources: tuple):
+        self.sources = sources
+        self._engine = engine
+        self._result: QueryResult | None = None
+
+    @property
+    def done(self) -> bool:
+        return self._result is not None
+
+    def result(self) -> QueryResult:
+        if self._result is None:
+            self._engine.drain()
+        return self._result
+
+    def __repr__(self):
+        state = "done" if self.done else "pending"
+        return f"QueryHandle(sources={self.sources}, {state})"
+
+
+class SsspEngine:
+    """One per-graph session: owns the shards, the resolved phase pipeline,
+    and the compiled programs that answer query streams against them."""
+
+    def __init__(self, shards: SsspShards, cfg: SsspConfig, backend: str,
+                 mesh=None, axis_names=None, max_bucket: int = 16):
+        if backend not in ("sim", "shmap"):
+            raise ValueError(f"unknown backend {backend!r}; valid: "
+                             "['shmap', 'sim']")
+        if backend == "shmap" and (mesh is None or axis_names is None):
+            raise ValueError("backend='shmap' requires mesh and axis_names")
+        self.shards = shards
+        self.cfg = cfg
+        self.backend = backend
+        self.mesh = mesh
+        self.axis_names = tuple(axis_names) if axis_names else None
+        self.max_bucket = int(max_bucket)
+        self._pending: list[QueryHandle] = []
+        self.batches_served = 0
+        self.queries_served = 0
+        # per-engine compile cache: ONE jitted program per backend whose
+        # jit cache holds one entry per K-bucket; trace_counts[K] counts
+        # them (a trace-time side effect, so reuse is directly assertable)
+        self.trace_counts: dict[int, int] = {}
+        self._compile_s: dict[int, float] = {}
+        if backend == "sim":
+            base_round = _make_round(shards, cfg, SimComm(shards.n_parts),
+                                     vmapped=True, n_parts=shards.n_parts)
+
+            def counted_round(carry):
+                self._note_trace(int(carry.dist.shape[1]))
+                return base_round(carry)
+
+            self.round_fn = jax.jit(counted_round)
+            self.shmap_solver = None
+        else:
+            self.round_fn = None
+            self.shmap_solver = build_shmap_solver_traced(
+                shards, cfg, mesh, self.axis_names, on_trace=self._note_trace)
+
+    # ---------------------------------------------------------- build ----
+
+    @classmethod
+    def build(cls, graph_or_shards, cfg: SsspConfig | None = None,
+              backend: str = "sim", mesh=None, axis_names=None, *,
+              n_parts: int = 8, max_bucket: int = 16,
+              **shard_kwargs) -> "SsspEngine":
+        """Create a session over a :class:`SsspShards` (used as-is) or a
+        :class:`~repro.graph.structure.Graph` (partitioned here with
+        ``n_parts`` and any ``build_shards`` keyword)."""
+        if isinstance(graph_or_shards, SsspShards):
+            if shard_kwargs:
+                raise ValueError("shard build options only apply when "
+                                 "building from a Graph")
+            sh = graph_or_shards
+        else:
+            sh = build_shards(graph_or_shards, n_parts, **shard_kwargs)
+        return cls(sh, cfg or SsspConfig(), backend, mesh, axis_names,
+                   max_bucket=max_bucket)
+
+    @property
+    def n_vertices(self) -> int:
+        return self.shards.n_vertices
+
+    @property
+    def n_parts(self) -> int:
+        return self.shards.n_parts
+
+    @property
+    def trace_count(self) -> int:
+        """Total traces across every bucket program this engine compiled."""
+        return sum(self.trace_counts.values())
+
+    def _note_trace(self, kb: int) -> None:
+        self.trace_counts[kb] = self.trace_counts.get(kb, 0) + 1
+
+    # ---------------------------------------------------------- solve ----
+
+    def solve(self, sources, *, bucket: bool = True) -> QueryResult:
+        """Solve a source batch (int or sequence). Pads to the next
+        power-of-two K-bucket (``bucket=False`` keeps K exact — same
+        results bit-for-bit, one extra compiled shape) and answers from
+        the bucket's compiled program."""
+        srcs = _as_sources(sources, self.shards.n_vertices)
+        k = len(srcs)
+        if k < 1:
+            raise ValueError("at least one source is required")
+        kb = bucket_k(k) if bucket else k
+        src_arr = np.zeros((kb,), np.int32)
+        src_arr[:k] = srcs
+        q_valid = np.zeros((kb,), bool)
+        q_valid[:k] = True
+
+        traces0 = self.trace_count
+        t0 = time.perf_counter()
+        compile_s = 0.0
+        if self.backend == "sim":
+            carry = _init_carry(self.shards, src_arr, self.cfg, rank=None,
+                                vmapped=True, q_valid=q_valid)
+            r = 0
+            while r < self.cfg.max_rounds:
+                fresh = self.trace_count == traces0
+                tc = time.perf_counter()
+                carry = self.round_fn(carry)
+                if fresh and self.trace_count > traces0:
+                    jax.block_until_ready(carry)
+                    compile_s = time.perf_counter() - tc
+                r += 1
+                if bool(np.asarray(carry.done).all()):
+                    break
+            # [P, K, block] -> per-query global distance vectors
+            dist = np.moveaxis(np.asarray(carry.dist), 0, 1)
+            dist = dist.reshape(kb, -1)[:k, : self.shards.n_vertices]
+            stats = SsspStats(
+                rounds=carry.rounds,
+                relaxations=np.sum(carry.relaxations, dtype=np.int32),
+                msgs_sent=np.sum(carry.msgs_sent, dtype=np.int32),
+                msgs_recv=np.sum(carry.msgs_recv, dtype=np.int32),
+                pruned_edges=np.sum(carry.pruned, dtype=np.int32),
+                q_rounds=np.max(np.asarray(carry.q_rounds), axis=0)[:k],
+                q_relaxations=np.sum(np.asarray(carry.relaxations),
+                                     axis=0)[:k])
+        else:
+            tc = time.perf_counter()
+            dist_pk, stats = self.shmap_solver(self.shards, src_arr, q_valid)
+            jax.block_until_ready(dist_pk)
+            if self.trace_count > traces0:
+                compile_s = time.perf_counter() - tc
+            dist = np.moveaxis(np.asarray(dist_pk), 0, 1)   # [K, P, block]
+            dist = dist.reshape(kb, -1)[:k, : self.shards.n_vertices]
+            stats = stats._replace(q_rounds=stats.q_rounds[:k],
+                                   q_relaxations=stats.q_relaxations[:k])
+        wall_s = time.perf_counter() - t0
+        compiled = self.trace_count > traces0
+        if compiled:
+            self._compile_s[kb] = compile_s
+        self.batches_served += 1
+        self.queries_served += k
+        return QueryResult(dist=dist, sources=srcs, stats=stats, bucket_k=kb,
+                           backend=self.backend, wall_s=wall_s,
+                           compile_s=compile_s, compiled=compiled)
+
+    def warmup(self, k: int = 1) -> float:
+        """Compile the bucket program serving batches of size ``k`` ahead
+        of traffic; returns the cold-start seconds (0.0 if already warm)."""
+        kb = bucket_k(k)
+        if self.trace_counts.get(kb, 0) > 0:
+            return 0.0
+        res = self.solve([0] * kb)
+        return res.compile_s
+
+    # ------------------------------------------------------- streaming ----
+
+    def submit(self, sources) -> QueryHandle:
+        """Enqueue a query (or query batch) for the next ``drain``; sources
+        are validated NOW so a bad id fails at submission, not mid-drain."""
+        srcs = _as_sources(sources, self.shards.n_vertices)
+        if len(srcs) < 1:
+            raise ValueError("at least one source is required")
+        h = QueryHandle(self, srcs)
+        self._pending.append(h)
+        return h
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def drain(self) -> list[QueryResult]:
+        """Coalesce pending arrivals into bucketed batches and solve them.
+
+        Consecutive handles are packed while the combined size stays within
+        ``max_bucket``; a handle is never split, so an oversized submission
+        simply rides its own (larger) bucket. Each handle receives a
+        :class:`QueryResult` view of its own rows; batch-level aggregates
+        (rounds, totals, timing) are shared by every handle in the batch.
+        If a solve fails mid-drain, every unsolved handle (including the
+        failing batch) is re-queued before the error propagates — no
+        submission is silently lost."""
+        pending, self._pending = self._pending, []
+        results: list[QueryResult] = []
+        i = 0
+        while i < len(pending):
+            start = i
+            group = [pending[i]]
+            total = len(pending[i].sources)
+            i += 1
+            while (i < len(pending)
+                   and total + len(pending[i].sources) <= self.max_bucket):
+                group.append(pending[i])
+                total += len(pending[i].sources)
+                i += 1
+            try:
+                batch = self.solve([s for h in group for s in h.sources])
+            except BaseException:
+                self._pending = pending[start:] + self._pending
+                raise
+            off = 0
+            for h in group:
+                kk = len(h.sources)
+                sl = slice(off, off + kk)
+                h._result = dataclasses.replace(
+                    batch, dist=batch.dist[sl], sources=h.sources,
+                    stats=batch.stats._replace(
+                        q_rounds=batch.stats.q_rounds[sl],
+                        q_relaxations=batch.stats.q_relaxations[sl]))
+                results.append(h._result)
+                off += kk
+        return results
+
+    def __repr__(self):
+        return (f"SsspEngine(backend={self.backend!r}, "
+                f"n_vertices={self.n_vertices}, n_parts={self.n_parts}, "
+                f"buckets={sorted(self.trace_counts)}, "
+                f"pending={self.pending})")
+
+
+# --------------------------------------------------------------------------
+# engine cache backing the legacy free-function wrappers
+# --------------------------------------------------------------------------
+
+# One engine per (shards object, cfg, backend, mesh/axes): the legacy
+# solve_* wrappers answer many calls against the same partitioned graph and
+# must keep the compile-reuse the engine exists for. A cached engine holds
+# its shards (and mesh) strongly, so the id() halves of a live entry's key
+# cannot be recycled into an alias; the cache is bounded. This replaces the
+# old module-global _SIM_ROUND_CACHE — the compiled programs now live in
+# the engines.
+_ENGINE_CACHE: dict = {}
+_ENGINE_CACHE_MAX = 16
+
+
+def engine_for(sh: SsspShards, cfg: SsspConfig, backend: str = "sim",
+               mesh=None, axis_names=None) -> SsspEngine:
+    """Cached engine lookup for the legacy wrappers (and anything else that
+    holds shards + cfg instead of a session)."""
+    axes = tuple(axis_names) if axis_names else None
+    key = (id(sh), cfg, backend, None if mesh is None else id(mesh), axes)
+    eng = _ENGINE_CACHE.get(key)
+    if eng is not None and eng.shards is sh and eng.mesh is mesh:
+        return eng
+    eng = SsspEngine(sh, cfg, backend, mesh, axes)
+    if len(_ENGINE_CACHE) >= _ENGINE_CACHE_MAX:
+        _ENGINE_CACHE.pop(next(iter(_ENGINE_CACHE)))
+    _ENGINE_CACHE[key] = eng
+    return eng

@@ -4,8 +4,12 @@ The paper solves ONE source per run; this driver is a multi-source *query
 engine*: every solve takes K sources at once against the same partitioned
 graph, so the one-time preprocessing (partitioning, message routing,
 Trishla triangle enumeration, the dst-tiled Pallas edge layout) is
-amortized across the whole batch. Single-source entry points are thin
-K=1 wrappers.
+amortized across the whole batch. Sources are a TRACED ``[K]`` input —
+``_init_carry`` scatters the source bit inside the program — so one
+compiled program per K serves arbitrary source sets on both backends.
+The public session surface lives in :mod:`repro.core.engine`
+(``SsspEngine``); the free functions at the bottom of this module are
+deprecated thin wrappers over it.
 
 The round is an explicit *phase pipeline*: every phase (local, send,
 exchange, merge, termination) is a stage resolved from the backend
@@ -56,7 +60,6 @@ axis (edge pruning is a property of the graph, not of the source).
 from __future__ import annotations
 
 import dataclasses
-import weakref
 from functools import partial
 from typing import Any, NamedTuple, Sequence
 
@@ -555,21 +558,34 @@ def _toka2_init_batch(rank, nq: int):
         lambda x: jnp.broadcast_to(x, (nq,) + jnp.shape(x)), st)
 
 
-def _init_carry(sh: SsspShards, sources: Sequence[int], cfg: SsspConfig, rank,
-                vmapped: bool):
-    """Stacked init (sim) or per-shard init (shard_map) for K sources."""
+def _init_carry(sh: SsspShards, sources, cfg: SsspConfig, rank,
+                vmapped: bool, q_valid=None):
+    """Stacked init (sim) or per-shard init (shard_map) for K sources.
+
+    ``sources`` is a TRACED [K] int32 array (a python sequence is accepted
+    and converted): the source bit is scattered, not baked, so one compiled
+    program serves any source batch of a given K. ``q_valid`` masks padded
+    bucket rows — an invalid query starts with an empty frontier and
+    ``done=True``, so it never relaxes, sends, or counts in any statistic.
+    """
     block = sh.block
     n_parts = sh.n_parts
-    sources = tuple(int(s) for s in sources)
-    nq = len(sources)
+    sources = jnp.asarray(sources, jnp.int32)
+    nq = int(sources.shape[0])
+    if q_valid is None:
+        q_valid = jnp.ones((nq,), bool)
+    else:
+        q_valid = jnp.asarray(q_valid, bool)
+    owner = sources // block
+    local = sources % block
+    qi = jnp.arange(nq)
 
     if vmapped:
         Pn = n_parts
-        dist = jnp.full((Pn, nq, block), INF, jnp.float32)
-        active = jnp.zeros((Pn, nq, block), bool)
-        for k, s in enumerate(sources):
-            dist = dist.at[s // block, k, s % block].set(0.0)
-            active = active.at[s // block, k, s % block].set(True)
+        dist = (jnp.full((Pn, nq, block), INF, jnp.float32)
+                .at[owner, qi, local].set(jnp.where(q_valid, 0.0, INF)))
+        active = (jnp.zeros((Pn, nq, block), bool)
+                  .at[owner, qi, local].set(q_valid))
         e_all = sh.loc_w.shape[1] + sh.cut_w.shape[1]
         pruned = jnp.zeros((Pn, e_all), bool)
         last_sent = jnp.full((Pn, nq, sh.slot_owner.shape[1]), INF, jnp.float32)
@@ -577,21 +593,19 @@ def _init_carry(sh: SsspShards, sources: Sequence[int], cfg: SsspConfig, rank,
         zeroq = jnp.zeros((Pn, nq), jnp.int32)
         toka2 = jax.vmap(lambda r: _toka2_init_batch(r, nq))(
             jnp.arange(Pn, dtype=jnp.int32))
-        done = jnp.zeros((Pn, nq), bool)
+        done = jnp.broadcast_to(~q_valid, (Pn, nq))
     else:
-        dist = jnp.full((nq, block), INF, jnp.float32)
-        active = jnp.zeros((nq, block), bool)
-        for k, s in enumerate(sources):
-            mine = rank == s // block
-            dist = dist.at[k, s % block].set(jnp.where(mine, 0.0, INF))
-            active = active.at[k, s % block].set(mine)
+        mine = (owner == rank) & q_valid
+        dist = (jnp.full((nq, block), INF, jnp.float32)
+                .at[qi, local].set(jnp.where(mine, 0.0, INF)))
+        active = jnp.zeros((nq, block), bool).at[qi, local].set(mine)
         e_all = sh.loc_w.shape[0] + sh.cut_w.shape[0]
         pruned = jnp.zeros((e_all,), bool)
         last_sent = jnp.full((nq, sh.slot_owner.shape[0]), INF, jnp.float32)
         cursor = jnp.zeros((), jnp.int32)
         zeroq = jnp.zeros((nq,), jnp.int32)
         toka2 = _toka2_init_batch(rank, nq)
-        done = jnp.zeros((nq,), bool)
+        done = ~q_valid
 
     if cfg.prune_offline_passes > 0:
         off = partial(trishla.prune_offline, n_passes=cfg.prune_offline_passes)
@@ -627,84 +641,29 @@ def _as_sources(source_or_sources, n_vertices: int | None = None) -> tuple[int, 
     return sources
 
 
-# One compiled round per (shards object, config): a query engine answers
-# many batches against the same partitioned graph, and retracing the round
-# per solve would re-pay compilation on every request — the exact per-query
-# launch overhead batching exists to amortize. Entries are validated by
-# weakref identity (a recycled id() from a dead shards object cannot alias)
-# and the cache is bounded.
-_SIM_ROUND_CACHE: dict = {}
-_SIM_ROUND_CACHE_MAX = 32
+def build_shmap_solver_traced(sh_spec: SsspShards, cfg: SsspConfig, mesh,
+                              axis_names, on_trace=None):
+    """Traced-sources shard_map solver: one compiled program per K.
 
-
-def _sim_round(sh: SsspShards, cfg: SsspConfig):
-    key = (id(sh), cfg)
-    ent = _SIM_ROUND_CACHE.get(key)
-    if ent is not None and ent[0]() is sh:
-        return ent[1]
-    comm = SimComm(sh.n_parts)
-    fn = jax.jit(_make_round(sh, cfg, comm, vmapped=True, n_parts=sh.n_parts))
-    if len(_SIM_ROUND_CACHE) >= _SIM_ROUND_CACHE_MAX:
-        _SIM_ROUND_CACHE.pop(next(iter(_SIM_ROUND_CACHE)))
-    _SIM_ROUND_CACHE[key] = (weakref.ref(sh), fn)
-    return fn
-
-
-def solve_sim_batch(sh: SsspShards, sources: Sequence[int],
-                    cfg: SsspConfig = SsspConfig()):
-    """Single-device simulator, K sources: python outer loop, jitted round.
-
-    Returns (dist [K, n_vertices], SsspStats with per-query q_rounds /
-    q_relaxations [K])."""
-    sources = _as_sources(sources, sh.n_vertices)
-    nq = len(sources)
-    round_fn = _sim_round(sh, cfg)
-    carry = _init_carry(sh, sources, cfg, rank=None, vmapped=True)
-    r = 0
-    while r < cfg.max_rounds:
-        carry = round_fn(carry)
-        r += 1
-        if bool(np.asarray(carry.done).all()):
-            break
-    # [P, K, block] -> per-query global distance vectors
-    dist = np.moveaxis(np.asarray(carry.dist), 0, 1)
-    dist = dist.reshape(nq, -1)[:, : sh.n_vertices]
-    stats = SsspStats(
-        rounds=carry.rounds,
-        relaxations=jnp.sum(carry.relaxations),
-        msgs_sent=jnp.sum(carry.msgs_sent),
-        msgs_recv=jnp.sum(carry.msgs_recv),
-        pruned_edges=jnp.sum(carry.pruned),
-        q_rounds=jnp.max(carry.q_rounds, axis=0),
-        q_relaxations=jnp.sum(carry.relaxations, axis=0))
-    return dist, stats
-
-
-def solve_sim(sh: SsspShards, source: int, cfg: SsspConfig = SsspConfig()):
-    """Single-source wrapper: a K=1 batch."""
-    dist, stats = solve_sim_batch(sh, (int(source),), cfg)
-    return dist[0], stats
-
-
-def build_shmap_solver(sh_spec: SsspShards, cfg: SsspConfig, mesh,
-                       axis_names, source):
-    """Returns a jittable fn(shards_stacked) -> (dist [P, K, block], stats).
-
-    ``source`` is an int or a sequence of ints (the query batch). The outer
-    round loop is a lax.while_loop inside the shard_map body; the whole
-    solve compiles to one XLA program (this is what the dry-run lowers for
-    the production meshes).
-    """
+    Returns a jitted ``fn(shards_stacked, sources [K] i32, q_valid [K] bool)
+    -> (dist [P, K, block], stats)``. ``sources`` and ``q_valid`` are traced
+    inputs replicated across the mesh — the source bit is scattered inside
+    the body, so the SAME compiled program answers arbitrary source batches
+    of a given K (the old per-batch recompile is gone). The outer round
+    loop is a ``lax.while_loop`` inside the shard_map body; the whole solve
+    is one XLA program (this is what the dry-run lowers for the production
+    meshes). ``on_trace(K)`` is called once per trace (compile accounting
+    for :class:`~repro.core.engine.SsspEngine`)."""
     axes = tuple(axis_names)
     n_parts = sh_spec.n_parts
-    sources = _as_sources(source, sh_spec.n_vertices)
     comm = ShmapComm(axes)
 
-    def body(sh_local: SsspShards):
+    def body(sh_local: SsspShards, sources, q_valid):
         sh1 = jax.tree_util.tree_map(lambda x: x[0], sh_local)  # strip P dim
         # recv_idx arrives as [1, P, C] -> [P, C]; inter_edges scalar
         rank = comm.rank()
-        carry = _init_carry(sh1, sources, cfg, rank=rank, vmapped=False)
+        carry = _init_carry(sh1, sources, cfg, rank=rank, vmapped=False,
+                            q_valid=q_valid)
         round_fn = _make_round(sh1, cfg, comm, vmapped=False, n_parts=n_parts)
 
         def cond(c: _Carry):
@@ -726,22 +685,85 @@ def build_shmap_solver(sh_spec: SsspShards, cfg: SsspConfig, mesh,
     in_specs = jax.tree_util.tree_map(lambda _: pspec, sh_spec)
     out_specs = (pspec, SsspStats(rspec, rspec, rspec, rspec, rspec,
                                   rspec, rspec))
-    return jax.jit(compat.shard_map(body, mesh=mesh, in_specs=(in_specs,),
-                                    out_specs=out_specs, check_vma=False))
+    shm = compat.shard_map(body, mesh=mesh, in_specs=(in_specs, rspec, rspec),
+                           out_specs=out_specs, check_vma=False)
+
+    def run(stacked, sources, q_valid):
+        # trace-time side effect: runs once per (K, shard avals) jit entry
+        if on_trace is not None:
+            on_trace(int(sources.shape[0]))
+        return shm(stacked, sources, q_valid)
+
+    return jax.jit(run)
+
+
+# --------------------------------------------------------------------------
+# legacy entry points — thin wrappers over the session engine
+#
+# The five free functions below predate repro.core.engine.SsspEngine and are
+# kept for compatibility; each delegates to a cached engine (engine_for) so
+# repeated calls share one compiled program per (K-bucket, cfg). Prefer:
+#
+#     eng = SsspEngine.build(shards_or_graph, cfg, backend=...)
+#     res = eng.solve(sources)          # QueryResult
+# --------------------------------------------------------------------------
+
+
+def solve_sim_batch(sh: SsspShards, sources: Sequence[int],
+                    cfg: SsspConfig = SsspConfig()):
+    """Single-device simulator, K sources.
+
+    .. deprecated:: delegate of :meth:`SsspEngine.solve` (``backend="sim"``);
+       kept for compatibility. Returns (dist [K, n_vertices], SsspStats with
+       per-query q_rounds / q_relaxations [K])."""
+    from repro.core.engine import engine_for
+    res = engine_for(sh, cfg, "sim").solve(sources)
+    return res.dist, res.stats
+
+
+def solve_sim(sh: SsspShards, source: int, cfg: SsspConfig = SsspConfig()):
+    """Single-source wrapper: a K=1 batch.
+
+    .. deprecated:: use :meth:`SsspEngine.solve` — this delegates to it."""
+    dist, stats = solve_sim_batch(sh, (int(source),), cfg)
+    return dist[0], stats
+
+
+def build_shmap_solver(sh_spec: SsspShards, cfg: SsspConfig, mesh,
+                       axis_names, source):
+    """Returns a jittable fn(shards_stacked) -> (dist [P, K, block], stats).
+
+    .. deprecated:: the engine's traced solver
+       (:func:`build_shmap_solver_traced`) serves ANY source batch of a
+       given K from one compiled program; this wrapper bakes ``source``
+       into a closure for callers that still expect a fn(shards) handle
+       (e.g. the dry-run lowering). No padding is applied: K = len(source).
+    """
+    from repro.core.engine import engine_for
+    sources = _as_sources(source, sh_spec.n_vertices)
+    eng = engine_for(sh_spec, cfg, "shmap", mesh, axis_names)
+    srcs = np.asarray(sources, np.int32)
+    q_valid = np.ones((len(sources),), bool)
+    return lambda stacked: eng.shmap_solver(stacked, srcs, q_valid)
 
 
 def solve_shmap_batch(sh: SsspShards, sources: Sequence[int], cfg: SsspConfig,
                       mesh, axis_names):
-    """shard_map backend, K sources. Returns (dist [K, n_vertices], stats)."""
-    sources = _as_sources(sources)
-    solver = build_shmap_solver(sh, cfg, mesh, axis_names, sources)
-    dist, stats = solver(sh)
-    dist = np.moveaxis(np.asarray(dist), 0, 1)          # [K, P, block]
-    dist = dist.reshape(len(sources), -1)[:, : sh.n_vertices]
-    return dist, stats
+    """shard_map backend, K sources. Returns (dist [K, n_vertices], stats).
+
+    .. deprecated:: delegate of :meth:`SsspEngine.solve`
+       (``backend="shmap"``); kept for compatibility. Sources are validated
+       against ``n_vertices`` exactly like the sim path (out-of-range ids
+       raise instead of silently vanishing), and repeated calls reuse the
+       engine's compiled solver instead of re-running build_shmap_solver."""
+    from repro.core.engine import engine_for
+    res = engine_for(sh, cfg, "shmap", mesh, axis_names).solve(sources)
+    return res.dist, res.stats
 
 
 def solve_shmap(sh: SsspShards, source: int, cfg: SsspConfig, mesh, axis_names):
-    """Single-source wrapper: a K=1 batch."""
+    """Single-source wrapper: a K=1 batch.
+
+    .. deprecated:: use :meth:`SsspEngine.solve` — this delegates to it."""
     dist, stats = solve_shmap_batch(sh, (int(source),), cfg, mesh, axis_names)
     return dist[0], stats

@@ -4,7 +4,9 @@
         --parts 8 --exchange bucket --toka toka2 --solver delta
 
 Batched query mode — K sources amortize one partition/preprocess over the
-whole batch and ride a single compiled solve:
+whole batch and ride a single compiled solve (the run goes through
+``SsspEngine``: sources are traced, the batch pads to the next K-bucket,
+and a later run of the same bucket shape would reuse the compiled program):
 
     ... repro.launch.sssp_run --sources 0,17,1999        # explicit batch
     ... repro.launch.sssp_run --num-sources 16 --batch   # sampled batch
@@ -20,8 +22,7 @@ import time
 
 import numpy as np
 
-from repro.core import (SsspConfig, build_shards, solve_shmap,
-                        solve_shmap_batch, solve_sim, solve_sim_batch)
+from repro.core import SsspConfig, SsspEngine, build_shards
 from repro.graph import (dijkstra_reference, rmat_graph, road_grid_graph,
                          random_graph)
 
@@ -92,19 +93,22 @@ def main():
                      send_backend=args.send_backend,
                      merge_backend=args.merge_backend,
                      prune_online=not args.no_prune)
-    t0 = time.time()
     if args.backend == "sim":
-        dists, stats = solve_sim_batch(sh, sources, cfg)
+        engine = SsspEngine.build(sh, cfg)
     else:
         import jax
         from repro import compat
         n_dev = len(jax.devices())
         mesh = compat.make_mesh((n_dev,), ("data",))
-        dists, stats = solve_shmap_batch(sh, sources, cfg, mesh, ("data",))
-    dt = time.time() - t0
+        engine = SsspEngine.build(sh, cfg, backend="shmap", mesh=mesh,
+                                  axis_names=("data",))
+    res = engine.solve(sources)
+    dists, stats = res.dist, res.stats
+    dt = res.wall_s
     mteps = int(stats.relaxations) / dt / 1e6
     qps = len(sources) / dt
-    print(f"solve: {dt:.3f}s  rounds={int(stats.rounds)} "
+    print(f"solve: {dt:.3f}s (compile {res.compile_s:.3f}s, "
+          f"bucket K={res.bucket_k})  rounds={int(stats.rounds)} "
           f"relax={int(stats.relaxations)} msgs={int(stats.msgs_sent)} "
           f"pruned={int(stats.pruned_edges)}  MTEPS={mteps:.1f} "
           f"queries/s={qps:.2f}")

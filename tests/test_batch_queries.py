@@ -177,17 +177,22 @@ def test_out_of_range_source_raises():
         solve_sim(sh, -1, SsspConfig())
 
 
-def test_sim_round_cache_reused():
-    """Repeated solves against the same shards/config reuse one compiled
-    round — the amortization a query engine exists for."""
-    from repro.core import sssp as sssp_mod
+def test_engine_cache_reused_by_wrappers():
+    """Repeated wrapper solves against the same shards/config reuse ONE
+    engine (and so one compiled round per K-bucket) — the amortization a
+    query engine exists for."""
+    from repro.core import engine_for
     g = random_graph(n=100, m=300, seed=47)
     sh = build_shards(g, 4)
     cfg = SsspConfig()
-    assert sssp_mod._sim_round(sh, cfg) is sssp_mod._sim_round(sh, cfg)
-    # distinct config -> distinct compiled round
-    assert sssp_mod._sim_round(sh, cfg) is not sssp_mod._sim_round(
-        sh, SsspConfig(exchange="pmin"))
+    assert engine_for(sh, cfg) is engine_for(sh, cfg)
+    # distinct config -> distinct engine (its own compiled pipeline)
+    assert engine_for(sh, cfg) is not engine_for(sh, SsspConfig(exchange="pmin"))
+    eng = engine_for(sh, cfg)
+    solve_sim_batch(sh, [0, 1, 2], cfg)
+    traces = dict(eng.trace_counts)
+    solve_sim_batch(sh, [5, 6, 7], cfg)   # same bucket, new sources
+    assert eng.trace_counts == traces == {4: 1}
 
 
 def test_sim_rounds_reported_from_carry():
