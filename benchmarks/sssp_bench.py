@@ -201,6 +201,81 @@ def bench_engine_serving(out):
         f"recompiles={eng.trace_count - trace0}")
 
 
+def bench_warm_start(out):
+    """Warm-start economics: cold rounds/qps vs landmark-seeded rounds/qps
+    vs result-cache hits (the `warm_start` section of BENCH_sssp.json).
+
+    Three tiers of the cache hierarchy on the same shards:
+      - cold: the baseline full-wave solve
+      - landmark: repeated sources seeded from the landmark cache — the
+        seed IS the pivot's solved fixpoint, so quiescence is confirmed in
+        ~1 round instead of re-propagating the wave (bit-identical dist,
+        asserted)
+      - cache_hit: exact repeats served from the result LRU with ZERO
+        rounds and no compiled program at all
+    Warm paths must not recompile: the second warm solve's `compiled` flag
+    is asserted False (same trace-counter discipline as engine_serving)."""
+    for name in ("graph1-like", "graph2-like"):
+        g = BENCH_GRAPHS[name]()
+        rng = np.random.default_rng(23)
+        sh = build_shards(g, 8, enumerate_triangles=False)
+        # pivot from vertices WITH out-edges: an isolated source solves in
+        # one round cold, leaving no rounds for the warm path to save
+        candidates = np.unique(np.asarray(g.src))
+        pivots = sorted(int(s) for s in
+                        rng.choice(candidates, size=4, replace=False))
+        cold_eng = SsspEngine.build(sh, SsspConfig(prune_online=False))
+        warm_eng = SsspEngine.build(
+            sh, SsspConfig(prune_online=False, warm_start="landmark"),
+            result_cache=32)
+        warm_eng.precompute_landmarks(pivots)
+        for k in (1, 4):
+            sources = pivots[:k]
+            cold_eng.solve(sources)                       # warmup + compile
+            ts = []
+            for _ in range(3):
+                t0 = time.perf_counter()
+                cold = cold_eng.solve(sources)
+                ts.append(time.perf_counter() - t0)
+            t_cold = min(ts)
+            out(f"warm_start[{name}][cold][K={k}]", t_cold * 1e6,
+                f"qps={k / t_cold:.3f} rounds={int(cold.stats.rounds)}")
+            # landmark-seeded repeats (bypass the LRU: seed-path rounds)
+            warm_eng._solve_batch(tuple(sources))         # warmup + compile
+            ts, recompiles = [], 0
+            for _ in range(3):
+                t0 = time.perf_counter()
+                warm = warm_eng._solve_batch(tuple(sources))
+                ts.append(time.perf_counter() - t0)
+                recompiles += int(warm.compiled)
+            t_warm = min(ts)
+            assert recompiles == 0, "warm landmark solves must not recompile"
+            assert np.array_equal(cold.dist, warm.dist), \
+                "warm-started solve must be bit-identical to cold"
+            assert int(warm.stats.rounds) <= int(cold.stats.rounds)
+            if int(cold.stats.rounds) > 2:
+                # graphs with real round depth (the road grid always; the
+                # rmat graphs at full scale) must show a STRICT decrease
+                assert int(warm.stats.rounds) < int(cold.stats.rounds), \
+                    "landmark seeding must cut rounds on repeated sources"
+            out(f"warm_start[{name}][landmark][K={k}]", t_warm * 1e6,
+                f"qps={k / t_warm:.3f} rounds={int(warm.stats.rounds)} "
+                f"cold_rounds={int(cold.stats.rounds)} "
+                f"speedup={t_cold / t_warm:.1f}x")
+        # exact repeats: the result LRU answers without any solve
+        warm_eng.solve(pivots)
+        ts = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            hit = warm_eng.solve(pivots)
+            ts.append(time.perf_counter() - t0)
+        t_hit = min(ts)
+        assert hit.cache_hits == len(pivots) and int(hit.stats.rounds) == 0
+        out(f"warm_start[{name}][cache_hit][K={len(pivots)}]", t_hit * 1e6,
+            f"qps={len(pivots) / t_hit:.3f} rounds=0 "
+            f"hits={hit.cache_hits}")
+
+
 def _block(x):
     return jax.tree_util.tree_map(
         lambda a: a.block_until_ready() if hasattr(a, "block_until_ready")
@@ -271,4 +346,71 @@ def run_all(out):
     bench_pallas_solver(out)
     bench_batch_throughput(out)
     bench_engine_serving(out)
+    bench_warm_start(out)
     bench_phase_breakdown(out)
+
+
+# ---------------------------------------------------------------- smoke ----
+
+SMOKE_GRAPHS = {
+    # same shapes as BENCH_GRAPHS, scaled to CI seconds: the smoke profile
+    # exists to catch wiring rot (recompiles on warm paths, broken bench
+    # sections), not to track performance numbers.
+    "graph1-like": lambda: rmat_graph(scale=8, edge_factor=2, seed=1),
+    "graph2-like": lambda: road_grid_graph(side=16, seed=2),
+    "graph3-like": lambda: rmat_graph(scale=7, edge_factor=8, seed=3),
+}
+
+
+def run_smoke(out):
+    """CI-sized subset: the engine-serving and warm-start sections on tiny
+    graphs. Both sections carry hard asserts (recompiles == 0 on warm
+    paths, warm bit-identity, zero-round cache hits), so the smoke job is
+    a correctness gate as well as an artifact producer."""
+    global BENCH_GRAPHS
+    full = BENCH_GRAPHS
+    BENCH_GRAPHS = SMOKE_GRAPHS
+    # distinct record names: smoke numbers must never clobber the tracked
+    # full-size perf trajectory when the merged json is written locally
+    def smoke_out(name, us, derived=""):
+        out(f"smoke/{name}", us, derived)
+    try:
+        bench_engine_serving(smoke_out)
+        bench_warm_start(smoke_out)
+    finally:
+        BENCH_GRAPHS = full
+
+
+def main(argv=None):
+    import argparse
+    import os
+    import sys
+
+    # script mode (`python benchmarks/sssp_bench.py`) puts benchmarks/ on
+    # sys.path, not the repo root the `benchmarks.run` import needs
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if root not in sys.path:
+        sys.path.insert(0, root)
+
+    p = argparse.ArgumentParser(description="SP-Async SSSP benchmarks")
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny CI profile (seconds): engine_serving + "
+                        "warm_start sections with recompile/bit-identity "
+                        "asserts")
+    p.add_argument("--out", default=None,
+                   help="output json (default: BENCH_sssp.json for the "
+                        "full run; the gitignored BENCH_sssp.smoke.json "
+                        "for --smoke, so local smoke runs never dirty the "
+                        "tracked perf trajectory)")
+    args = p.parse_args(argv)
+    from benchmarks.run import _out, _write_json
+    if args.smoke:
+        run_smoke(_out)
+        _write_json(args.out or "BENCH_sssp.smoke.json")
+    else:
+        run_all(_out)
+        _write_json(args.out or "BENCH_sssp.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,7 +10,6 @@ at durable storage — everything else is identical.
 import argparse
 
 import jax
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.data import TokenStream

@@ -8,14 +8,14 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.distributed.sharding import MeshAxes
-from repro.models.params import abstract, specs, n_params
+from repro.models.params import abstract, specs
 from repro.optim import AdamWConfig
 from repro.optim.adamw import AdamWState
 

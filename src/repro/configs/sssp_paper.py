@@ -19,7 +19,6 @@ class SsspGraphSpec:
     skew: float = 4.0      # bucket-capacity skew multiplier
 
     def shard_shapes(self, n_parts: int):
-        import math
         block = -(-self.n_vertices // n_parts)
         e_shard = -(-self.n_edges // n_parts)
         e_loc = max(int(e_shard * (1 - self.cut_fraction) * 1.15), 8)

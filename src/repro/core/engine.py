@@ -48,12 +48,15 @@ import dataclasses
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.shards import SsspShards, build_shards
+from repro.core import phases
+from repro.core.shards import SsspShards, build_shards, shard_distance_rows
 from repro.core.sssp import (SimComm, SsspConfig, SsspStats, _as_sources,
                              _init_carry, _make_round,
                              build_shmap_solver_traced)
+from repro.core.warmstart import CachedRow, LandmarkCache, ResultCache
 
 
 def bucket_k(k: int) -> int:
@@ -78,11 +81,13 @@ class QueryResult:
     dist: np.ndarray            # [K, n_vertices] per-query distances
     sources: tuple              # the K query sources, as submitted
     stats: SsspStats            # aggregates + per-query q_rounds/q_relaxations
-    bucket_k: int               # compiled batch shape this solve rode on
+    bucket_k: int               # compiled batch shape (0: fully cache-served)
     backend: str                # "sim" | "shmap"
     wall_s: float               # end-to-end solve wall time
     compile_s: float            # cold-start time (0.0 when warm)
     compiled: bool              # True iff this call traced a new program
+    cache_hits: int = 0         # queries answered from the result cache
+    warm_started: bool = False  # landmark-seeded (vs cold +inf) init
 
     @property
     def q_rounds(self) -> np.ndarray:
@@ -123,7 +128,8 @@ class SsspEngine:
     and the compiled programs that answer query streams against them."""
 
     def __init__(self, shards: SsspShards, cfg: SsspConfig, backend: str,
-                 mesh=None, axis_names=None, max_bucket: int = 16):
+                 mesh=None, axis_names=None, max_bucket: int = 16,
+                 result_cache: int = 0):
         if backend not in ("sim", "shmap"):
             raise ValueError(f"unknown backend {backend!r}; valid: "
                              "['shmap', 'sim']")
@@ -138,6 +144,32 @@ class SsspEngine:
         self._pending: list[QueryHandle] = []
         self.batches_served = 0
         self.queries_served = 0
+        # warm-start cache hierarchy (see core/warmstart.py): the result
+        # LRU serves exact repeats with ZERO rounds; the landmark cache
+        # (precompute_landmarks) seeds every other query's dist with
+        # triangle-inequality upper bounds when cfg.warm_start="landmark".
+        # graph_epoch keys both: bumping it (invalidate_caches) orphans
+        # every cached row without a scan.
+        self.graph_epoch = 0
+        self.result_cache = ResultCache(result_cache)
+        self.landmarks: LandmarkCache | None = None
+        self._warm_stage = phases.resolve("warm_init", cfg.warm_start)
+        if self._warm_stage.seed_stacked is not None:
+            # counted like the round program: the seed's jit entries are
+            # per (L, K) shape, and its first trace is a real compile that
+            # must show up in compiled/compile_s (the shmap warm program
+            # counts via on_trace; keep the accounting symmetric)
+            seed_stacked = self._warm_stage.seed_stacked
+
+            def counted_seed(land, sources, q_valid):
+                self._note_trace(int(sources.shape[0]))
+                return seed_stacked(land, sources, q_valid)
+
+            self._warm_seed = jax.jit(counted_seed)
+        else:
+            self._warm_seed = None
+        self._warm_solver = None        # lazily built shmap warm program
+        self._warm_traced: set = set()  # (K-bucket, L) warm-program traces
         # per-engine compile cache: ONE jitted program per backend whose
         # jit cache holds one entry per K-bucket; trace_counts[K] counts
         # them (a trace-time side effect, so reuse is directly assertable)
@@ -163,11 +195,13 @@ class SsspEngine:
     @classmethod
     def build(cls, graph_or_shards, cfg: SsspConfig | None = None,
               backend: str = "sim", mesh=None, axis_names=None, *,
-              n_parts: int = 8, max_bucket: int = 16,
+              n_parts: int = 8, max_bucket: int = 16, result_cache: int = 0,
               **shard_kwargs) -> "SsspEngine":
         """Create a session over a :class:`SsspShards` (used as-is) or a
         :class:`~repro.graph.structure.Graph` (partitioned here with
-        ``n_parts`` and any ``build_shards`` keyword)."""
+        ``n_parts`` and any ``build_shards`` keyword). ``result_cache``
+        sizes the exact-repeat LRU (0 = disabled, the bit-compatible
+        default: every solve runs the full pipeline)."""
         if isinstance(graph_or_shards, SsspShards):
             if shard_kwargs:
                 raise ValueError("shard build options only apply when "
@@ -176,7 +210,7 @@ class SsspEngine:
         else:
             sh = build_shards(graph_or_shards, n_parts, **shard_kwargs)
         return cls(sh, cfg or SsspConfig(), backend, mesh, axis_names,
-                   max_bucket=max_bucket)
+                   max_bucket=max_bucket, result_cache=result_cache)
 
     @property
     def n_vertices(self) -> int:
@@ -196,35 +230,76 @@ class SsspEngine:
 
     # ---------------------------------------------------------- solve ----
 
+    def _warm_active(self) -> bool:
+        """True when solves should seed from the landmark cache: the config
+        opted in AND a cache for the CURRENT graph epoch exists."""
+        return (self._warm_stage.needs_landmarks
+                and self.landmarks is not None
+                and self.landmarks.epoch == self.graph_epoch)
+
     def solve(self, sources, *, bucket: bool = True) -> QueryResult:
         """Solve a source batch (int or sequence). Pads to the next
         power-of-two K-bucket (``bucket=False`` keeps K exact — same
         results bit-for-bit, one extra compiled shape) and answers from
-        the bucket's compiled program."""
+        the bucket's compiled program.
+
+        With a result cache enabled, exact repeats of a source (within the
+        current graph epoch) are answered from the LRU with ZERO rounds,
+        and cached sources are stripped from the batch BEFORE padding — a
+        partially-cached batch rides a smaller bucket. Cached rows report
+        ``q_rounds == 0`` (this call did no work for them); distances are
+        the stored rows, bit-identical to the solve that produced them."""
         srcs = _as_sources(sources, self.shards.n_vertices)
-        k = len(srcs)
-        if k < 1:
+        if len(srcs) < 1:
             raise ValueError("at least one source is required")
+        if self.result_cache.maxsize == 0:
+            return self._solve_batch(srcs, bucket=bucket)
+        return self._solve_cached(srcs, bucket=bucket)
+
+    def _solve_batch(self, srcs: tuple, *, bucket: bool = True,
+                     use_warm: bool = True) -> QueryResult:
+        """Run the compiled pipeline for ``srcs`` (no result-cache layer).
+        ``use_warm=False`` forces the cold +inf init — used to solve the
+        landmark pivots themselves."""
+        k = len(srcs)
         kb = bucket_k(k) if bucket else k
         src_arr = np.zeros((kb,), np.int32)
         src_arr[:k] = srcs
         q_valid = np.zeros((kb,), bool)
         q_valid[:k] = True
+        warm = use_warm and self._warm_active()
 
         traces0 = self.trace_count
         t0 = time.perf_counter()
         compile_s = 0.0
         if self.backend == "sim":
+            seed = None
+            if warm:
+                tc = time.perf_counter()
+                seed = self._warm_seed(self.landmarks.dist,
+                                       jnp.asarray(src_arr),
+                                       jnp.asarray(q_valid))
+                if self.trace_count > traces0:
+                    jax.block_until_ready(seed)
+                    compile_s += time.perf_counter() - tc
+            if warm:
+                # solve-time coverage, keyed (bucket, L) like the shmap
+                # path: the seed program is separate from the round, so a
+                # cold trace of this bucket does not make the warm path
+                # compile-free (warmup() consults this set)
+                self._warm_traced.add((kb, self.landmarks.n_landmarks))
             carry = _init_carry(self.shards, src_arr, self.cfg, rank=None,
-                                vmapped=True, q_valid=q_valid)
+                                vmapped=True, q_valid=q_valid,
+                                seed_dist=seed)
             r = 0
+            traces_loop = self.trace_count
             while r < self.cfg.max_rounds:
-                fresh = self.trace_count == traces0
+                fresh = self.trace_count == traces_loop
                 tc = time.perf_counter()
                 carry = self.round_fn(carry)
-                if fresh and self.trace_count > traces0:
+                if fresh and self.trace_count > traces_loop:
                     jax.block_until_ready(carry)
-                    compile_s = time.perf_counter() - tc
+                    compile_s += time.perf_counter() - tc
                 r += 1
                 if bool(np.asarray(carry.done).all()):
                     break
@@ -242,7 +317,23 @@ class SsspEngine:
                                      axis=0)[:k])
         else:
             tc = time.perf_counter()
-            dist_pk, stats = self.shmap_solver(self.shards, src_arr, q_valid)
+            if warm:
+                if self._warm_solver is None:
+                    self._warm_solver = build_shmap_solver_traced(
+                        self.shards, self.cfg, self.mesh, self.axis_names,
+                        on_trace=self._note_trace, warm=True)
+                dist_pk, stats = self._warm_solver(self.shards, src_arr,
+                                                   q_valid,
+                                                   self.landmarks.dist)
+                # coverage recorded at SOLVE time, keyed (bucket, L): the
+                # warm program is distinct from the cold solver AND its
+                # jit entries depend on the landmark aval; recording at
+                # trace time would go stale when a jit-cache hit skips the
+                # trace (e.g. re-precompute with the same pivot count)
+                self._warm_traced.add((kb, self.landmarks.n_landmarks))
+            else:
+                dist_pk, stats = self.shmap_solver(self.shards, src_arr,
+                                                   q_valid)
             jax.block_until_ready(dist_pk)
             if self.trace_count > traces0:
                 compile_s = time.perf_counter() - tc
@@ -258,15 +349,135 @@ class SsspEngine:
         self.queries_served += k
         return QueryResult(dist=dist, sources=srcs, stats=stats, bucket_k=kb,
                            backend=self.backend, wall_s=wall_s,
-                           compile_s=compile_s, compiled=compiled)
+                           compile_s=compile_s, compiled=compiled,
+                           warm_started=warm)
+
+    def _solve_cached(self, srcs: tuple, *, bucket: bool) -> QueryResult:
+        """Result-cache layer over ``_solve_batch``: strip the sources the
+        LRU can answer (and in-batch duplicates) BEFORE bucket padding,
+        solve the remainder, then reassemble rows in submitted order."""
+        t0 = time.perf_counter()
+        epoch = self.graph_epoch
+        hits: dict[int, CachedRow] = {}
+        uncached: list[int] = []
+        for s in dict.fromkeys(srcs):
+            row = self.result_cache.get(s, epoch)
+            if row is None:
+                uncached.append(s)
+            else:
+                hits[s] = row
+        raw = None
+        if uncached:
+            raw = self._solve_batch(tuple(uncached), bucket=bucket)
+            for i, s in enumerate(uncached):
+                # copy: a view would pin the whole [kb, n] batch array in
+                # the LRU for as long as any one of its rows stays cached
+                self.result_cache.put(s, epoch,
+                                      CachedRow(dist=raw.dist[i].copy()))
+        raw_col = {s: i for i, s in enumerate(uncached)}
+
+        k = len(srcs)
+        dist = np.empty((k, self.shards.n_vertices), np.float32)
+        q_rounds = np.zeros((k,), np.int32)
+        q_relax = np.zeros((k,), np.int32)
+        n_hit = 0
+        for j, s in enumerate(srcs):
+            if s in hits:
+                dist[j] = hits[s].dist
+                n_hit += 1
+            else:
+                i = raw_col[s]
+                dist[j] = raw.dist[i]
+                q_rounds[j] = raw.q_rounds[i]
+                q_relax[j] = raw.q_relaxations[i]
+        zero = np.int32(0)
+        if raw is not None:
+            stats = raw.stats._replace(q_rounds=q_rounds,
+                                       q_relaxations=q_relax)
+        else:
+            # every source served from the LRU: zero rounds, no program run
+            stats = SsspStats(rounds=zero, relaxations=zero, msgs_sent=zero,
+                              msgs_recv=zero, pruned_edges=zero,
+                              q_rounds=q_rounds, q_relaxations=q_relax)
+            self.batches_served += 1
+        # _solve_batch already counted the uncached subset it ran
+        self.queries_served += k - len(uncached)
+        return QueryResult(
+            dist=dist, sources=srcs, stats=stats,
+            bucket_k=raw.bucket_k if raw is not None else 0,
+            backend=self.backend, wall_s=time.perf_counter() - t0,
+            compile_s=raw.compile_s if raw is not None else 0.0,
+            compiled=raw.compiled if raw is not None else False,
+            cache_hits=n_hit,
+            warm_started=raw.warm_started if raw is not None else False)
+
+    # ------------------------------------------------------ warm start ----
+
+    def precompute_landmarks(self, l_sources) -> LandmarkCache:
+        """Solve the L pivot sources once (cold) and cache their distances
+        sharded ``[L, block]`` per shard — ``4 B x L x block`` per shard.
+        With ``cfg.warm_start="landmark"`` every later solve seeds its
+        distance vector with ``min_l(land[l, src] + land[l, v])`` instead
+        of +inf and converges in fewer rounds, bit-identically. The pivot
+        rows also populate the result cache (a landmark solve IS an exact
+        solve of its pivot).
+
+        REQUIRES symmetric distances (``d(u, v) == d(v, u)``, true for
+        every undirected generator in :mod:`repro.graph.generators`): on a
+        directed graph the bound uses ``d(l, src)`` where the triangle
+        inequality needs ``d(src, l)``, and an invalid (too-low) seed
+        would be silently kept by the monotone pipeline. The solved pivot
+        rows give the ``L x L`` cross-distance matrix for free, so
+        detectable asymmetry raises here instead of corrupting solves —
+        a necessary check, not a sufficient one (a directed graph can be
+        symmetric between the sampled pivots yet asymmetric elsewhere)."""
+        srcs = _as_sources(l_sources, self.shards.n_vertices)
+        if len(srcs) < 1:
+            raise ValueError("at least one landmark source is required")
+        res = self._solve_batch(tuple(dict.fromkeys(srcs)), use_warm=False)
+        cross = res.dist[:, list(res.sources)]      # [L, L] pivot pairs
+        if not np.allclose(cross, cross.T, rtol=1e-4, atol=1e-4):
+            raise ValueError(
+                "landmark warm start requires symmetric distances, but the "
+                "pivot cross-distances are asymmetric (directed graph?): "
+                "the triangle-inequality seed would not be an upper bound")
+        land = shard_distance_rows(res.dist, self.shards.n_parts,
+                                   self.shards.block)
+        self.landmarks = LandmarkCache(sources=res.sources, dist=land,
+                                       epoch=self.graph_epoch)
+        for i, s in enumerate(res.sources):
+            self.result_cache.put(s, self.graph_epoch,
+                                  CachedRow(dist=res.dist[i].copy()))
+        return self.landmarks
+
+    def invalidate_caches(self) -> int:
+        """Graph-epoch bump: orphans every result-cache row and drops the
+        landmark cache. Call after mutating the underlying graph/shards —
+        cached distances are state that must not survive a graph change
+        (the SSSP-Del invalidation story). Returns the new epoch."""
+        self.graph_epoch += 1
+        self.result_cache.clear()
+        self.landmarks = None
+        self._warm_traced.clear()
+        return self.graph_epoch
 
     def warmup(self, k: int = 1) -> float:
         """Compile the bucket program serving batches of size ``k`` ahead
-        of traffic; returns the cold-start seconds (0.0 if already warm)."""
+        of traffic; returns the cold-start seconds (0.0 if already warm).
+        Bypasses the result cache (repeated sources must not shrink the
+        compiled shape below the requested bucket). Warms the programs
+        traffic will actually ride: on a landmark-warm engine that
+        includes the warm path (the shmap whole-solve warm program / the
+        sim seed program), which a cold trace of the same bucket (e.g.
+        from ``precompute_landmarks``) does not cover."""
         kb = bucket_k(k)
-        if self.trace_counts.get(kb, 0) > 0:
+        if self._warm_active():
+            already = (kb, self.landmarks.n_landmarks) in self._warm_traced
+        else:
+            already = self.trace_counts.get(kb, 0) > 0
+        if already:
             return 0.0
-        res = self.solve([0] * kb)
+        res = self._solve_batch((0,) * kb, bucket=False)
         return res.compile_s
 
     # ------------------------------------------------------- streaming ----

@@ -52,7 +52,6 @@ class LocalResult(NamedTuple):
 
 def _sweep(dist, frontier, loc_src, loc_dst, loc_w, pruned_loc):
     """One masked relaxation sweep. Returns (dist', new_frontier, n_relax)."""
-    block = dist.shape[0]
     src_ok = jnp.take(frontier, loc_src, mode="fill", fill_value=False)
     d_src = jnp.take(dist, loc_src, mode="fill", fill_value=float("inf"))
     w = jnp.where(pruned_loc, INF, loc_w)

@@ -23,6 +23,7 @@ Registered phases and their config keys:
   exchange       ``cfg.exchange``        bucket | pmin | a2a_dense
   merge          ``cfg.merge_backend``   xla | pallas
   toka           ``cfg.toka``            toka0 | toka1 | toka2
+  warm_init      ``cfg.warm_start``      none | landmark
   ============== ======================= ===========================
 
 Implementations live next to the machinery they use (``local_solver.py``

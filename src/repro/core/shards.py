@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.graph.structure import Graph, PartitionedGraph
+from repro.graph.structure import Graph
 from repro.core.partition import partition_1d
 from repro.kernels.merge import build_msg_tiled_layout
 from repro.kernels.relax import build_dst_tiled_layout
@@ -155,6 +155,22 @@ class SsspShards:
         if self.mx_pos is None:
             return None
         return (self.mx_pos, self.mx_dstrel, self.mx_valid)
+
+
+def shard_distance_rows(rows, n_parts: int, block: int) -> jax.Array:
+    """Re-shard host distance rows into the carry's per-shard layout.
+
+    ``rows``: [L, n_vertices] (e.g. the L solved landmark sources) ->
+    ``[P, L, block]`` with +inf on the padding vertices, matching how the
+    solver's ``dist`` is blocked across shards. This is the storage layout
+    of the engine's landmark cache — 4 B x L x block per shard — chosen so
+    the warm-init seed is a per-shard broadcast against the resident
+    ``dist`` block, with no runtime re-partitioning."""
+    rows = np.asarray(rows, np.float32)
+    n_land, n = rows.shape
+    full = np.full((n_land, n_parts * block), np.inf, np.float32)
+    full[:, :n] = rows
+    return jnp.asarray(np.swapaxes(full.reshape(n_land, n_parts, block), 0, 1))
 
 
 def build_shards(g: Graph, n_parts: int, max_triangles_per_part: int | None = None,

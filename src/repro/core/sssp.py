@@ -71,6 +71,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core import phases
+from repro.core import warmstart  # noqa: F401  (registers warm_init backends)
 from repro.core import toka as toka_mod
 from repro.core.local_solver import local_fixpoint_batch
 from repro.core.shards import SsspShards
@@ -91,6 +92,7 @@ class SsspConfig:
     local_solver: str = "bellman"   # bellman | delta | pallas
     send_backend: str = "xla"       # xla | pallas (cut-edge segment-min pack)
     merge_backend: str = "xla"      # xla | pallas (incoming scatter-min)
+    warm_start: str = "none"        # none | landmark (engine-owned seed cache)
     delta: float = 4.0
     local_iters: int = 10_000
     pallas_sweeps: int = 8          # relaxation sweeps fused per pallas_call
@@ -108,6 +110,7 @@ class SsspConfig:
         phases.validate("local_solver", self.local_solver)
         phases.validate("send", self.send_backend)
         phases.validate("merge", self.merge_backend)
+        phases.validate("warm_init", self.warm_start)
 
 
 class SsspStats(NamedTuple):
@@ -311,6 +314,9 @@ class ShmapComm:
 
     def ring(self, tok):
         return ring_permute(tok, self.axes)
+
+    def min_all(self, x):
+        return lax.pmin(x, self.axes)
 
     def all_any(self, flag):
         return or_reduce(flag, self.axes)
@@ -559,7 +565,7 @@ def _toka2_init_batch(rank, nq: int):
 
 
 def _init_carry(sh: SsspShards, sources, cfg: SsspConfig, rank,
-                vmapped: bool, q_valid=None):
+                vmapped: bool, q_valid=None, seed_dist=None):
     """Stacked init (sim) or per-shard init (shard_map) for K sources.
 
     ``sources`` is a TRACED [K] int32 array (a python sequence is accepted
@@ -567,6 +573,15 @@ def _init_carry(sh: SsspShards, sources, cfg: SsspConfig, rank,
     program serves any source batch of a given K. ``q_valid`` masks padded
     bucket rows — an invalid query starts with an empty frontier and
     ``done=True``, so it never relaxes, sends, or counts in any statistic.
+
+    ``seed_dist`` is the TRACED warm-start input ([P, K, block] stacked /
+    [K, block] per shard, or None for the cold +inf start): per-vertex
+    upper bounds produced by a ``warm_init`` stage. Every finitely-seeded
+    vertex starts ACTIVE — a seeded value must still be relaxed *from*,
+    otherwise a neighbor whose shortest path runs through it could get
+    stuck above its true distance. The source bit is min-scattered to 0 on
+    top of the seed, so the monotone pipeline reaches the same fixpoint as
+    the cold start, just from a much closer initialization.
     """
     block = sh.block
     n_parts = sh.n_parts
@@ -582,10 +597,15 @@ def _init_carry(sh: SsspShards, sources, cfg: SsspConfig, rank,
 
     if vmapped:
         Pn = n_parts
-        dist = (jnp.full((Pn, nq, block), INF, jnp.float32)
-                .at[owner, qi, local].set(jnp.where(q_valid, 0.0, INF)))
-        active = (jnp.zeros((Pn, nq, block), bool)
-                  .at[owner, qi, local].set(q_valid))
+        if seed_dist is None:
+            dist = (jnp.full((Pn, nq, block), INF, jnp.float32)
+                    .at[owner, qi, local].set(jnp.where(q_valid, 0.0, INF)))
+            active = (jnp.zeros((Pn, nq, block), bool)
+                      .at[owner, qi, local].set(q_valid))
+        else:
+            dist = seed_dist.at[owner, qi, local].min(
+                jnp.where(q_valid, 0.0, INF))
+            active = jnp.isfinite(dist) & q_valid[None, :, None]
         e_all = sh.loc_w.shape[1] + sh.cut_w.shape[1]
         pruned = jnp.zeros((Pn, e_all), bool)
         last_sent = jnp.full((Pn, nq, sh.slot_owner.shape[1]), INF, jnp.float32)
@@ -596,9 +616,13 @@ def _init_carry(sh: SsspShards, sources, cfg: SsspConfig, rank,
         done = jnp.broadcast_to(~q_valid, (Pn, nq))
     else:
         mine = (owner == rank) & q_valid
-        dist = (jnp.full((nq, block), INF, jnp.float32)
-                .at[qi, local].set(jnp.where(mine, 0.0, INF)))
-        active = jnp.zeros((nq, block), bool).at[qi, local].set(mine)
+        if seed_dist is None:
+            dist = (jnp.full((nq, block), INF, jnp.float32)
+                    .at[qi, local].set(jnp.where(mine, 0.0, INF)))
+            active = jnp.zeros((nq, block), bool).at[qi, local].set(mine)
+        else:
+            dist = seed_dist.at[qi, local].min(jnp.where(mine, 0.0, INF))
+            active = jnp.isfinite(dist) & q_valid[:, None]
         e_all = sh.loc_w.shape[0] + sh.cut_w.shape[0]
         pruned = jnp.zeros((e_all,), bool)
         last_sent = jnp.full((nq, sh.slot_owner.shape[0]), INF, jnp.float32)
@@ -642,7 +666,7 @@ def _as_sources(source_or_sources, n_vertices: int | None = None) -> tuple[int, 
 
 
 def build_shmap_solver_traced(sh_spec: SsspShards, cfg: SsspConfig, mesh,
-                              axis_names, on_trace=None):
+                              axis_names, on_trace=None, warm: bool = False):
     """Traced-sources shard_map solver: one compiled program per K.
 
     Returns a jitted ``fn(shards_stacked, sources [K] i32, q_valid [K] bool)
@@ -653,17 +677,35 @@ def build_shmap_solver_traced(sh_spec: SsspShards, cfg: SsspConfig, mesh,
     loop is a ``lax.while_loop`` inside the shard_map body; the whole solve
     is one XLA program (this is what the dry-run lowers for the production
     meshes). ``on_trace(K)`` is called once per trace (compile accounting
-    for :class:`~repro.core.engine.SsspEngine`)."""
+    for :class:`~repro.core.engine.SsspEngine`).
+
+    ``warm=True`` builds the landmark-seeded variant: the returned fn takes
+    a fourth TRACED input ``land [P, L, block]`` (the engine's sharded
+    landmark cache, partitioned like the shards) and runs the resolved
+    ``warm_init`` stage inside the body — one small [L, K] all-reduce to
+    gather the landmark-at-source bounds, then a per-shard seed that
+    ``_init_carry`` consumes. Landmark distances stay sharded on the wire;
+    only the [L, K] gather is replicated."""
     axes = tuple(axis_names)
     n_parts = sh_spec.n_parts
     comm = ShmapComm(axes)
+    warm_stage = phases.resolve("warm_init", cfg.warm_start) if warm else None
+    if warm and warm_stage.seed_shard is None:
+        raise ValueError(
+            f"warm=True needs a seeding warm_init backend; "
+            f"cfg.warm_start={cfg.warm_start!r} does not seed")
 
-    def body(sh_local: SsspShards, sources, q_valid):
+    def body(sh_local: SsspShards, sources, q_valid, *warm_args):
         sh1 = jax.tree_util.tree_map(lambda x: x[0], sh_local)  # strip P dim
         # recv_idx arrives as [1, P, C] -> [P, C]; inter_edges scalar
         rank = comm.rank()
+        seed = None
+        if warm:
+            land_loc = warm_args[0][0]                   # [L, block]
+            seed = warm_stage.seed_shard(land_loc, sources, q_valid, rank,
+                                         sh_spec.block, comm.min_all)
         carry = _init_carry(sh1, sources, cfg, rank=rank, vmapped=False,
-                            q_valid=q_valid)
+                            q_valid=q_valid, seed_dist=seed)
         round_fn = _make_round(sh1, cfg, comm, vmapped=False, n_parts=n_parts)
 
         def cond(c: _Carry):
@@ -683,16 +725,17 @@ def build_shmap_solver_traced(sh_spec: SsspShards, cfg: SsspConfig, mesh,
     pspec = P(axes)
     rspec = P()
     in_specs = jax.tree_util.tree_map(lambda _: pspec, sh_spec)
+    in_specs = (in_specs, rspec, rspec) + ((pspec,) if warm else ())
     out_specs = (pspec, SsspStats(rspec, rspec, rspec, rspec, rspec,
                                   rspec, rspec))
-    shm = compat.shard_map(body, mesh=mesh, in_specs=(in_specs, rspec, rspec),
+    shm = compat.shard_map(body, mesh=mesh, in_specs=in_specs,
                            out_specs=out_specs, check_vma=False)
 
-    def run(stacked, sources, q_valid):
+    def run(stacked, sources, q_valid, *warm_args):
         # trace-time side effect: runs once per (K, shard avals) jit entry
         if on_trace is not None:
             on_trace(int(sources.shape[0]))
-        return shm(stacked, sources, q_valid)
+        return shm(stacked, sources, q_valid, *warm_args)
 
     return jax.jit(run)
 

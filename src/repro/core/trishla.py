@@ -22,7 +22,6 @@ Edge ids index the shard's combined edge view: ``[loc_w ++ cut_w]``.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 INF = jnp.float32(jnp.inf)

@@ -1,0 +1,222 @@
+"""Warm-start subsystem: landmark distance cache + query-result reuse.
+
+The serving ROADMAP amortizes one ``build_shards`` over many queries; this
+module amortizes the *solves* themselves — repeated and nearby sources
+should not pay full Bellman rounds. Two cache layers, both owned by
+:class:`~repro.core.engine.SsspEngine`:
+
+1. **Landmark cache** (:class:`LandmarkCache`): L pivot sources are solved
+   once and their distances stored SHARDED, ``[P, L, block]`` — the same
+   layout as the carry's ``dist``, so the seed computation is a per-shard
+   broadcast with no re-partitioning. A traced ``warm_init`` stage then
+   seeds every query's distance vector with the triangle-inequality upper
+   bound ``min_l(land[l, src] + land[l, v])`` instead of ``+inf``
+   (heuristic-search SSSP, arXiv:2506.19349: landmark upper bounds prune
+   most relaxations). Every seeded vertex starts ACTIVE, so the first
+   round relaxes from the whole seeded set and later rounds only propagate
+   residual corrections — the monotone scatter-min pipeline converges in
+   fewer rounds with bit-identical final distances (the seed is an upper
+   bound; relaxation from any upper-bound initialization reaches the same
+   fixpoint it reaches from the cold ``+inf`` start).
+
+   The bound assumes symmetric distances (``d(src, l) == d(l, src)``) —
+   true for every undirected generator in :mod:`repro.graph.generators`.
+   Memory: ``4 B x L x block`` per shard, the cost model documented in
+   ROADMAP.md.
+
+2. **Query-result cache**: an LRU keyed by ``(source, graph_epoch)``
+   serving exact repeats without a solve — zero rounds, the stored
+   distance row returned as-is (SSSP-Del, arXiv:2508.14319: cached
+   distances are state that survives across queries, not per-call
+   scratch). The engine strips cached sources from a batch BEFORE bucket
+   padding, so a mixed batch rides a smaller compiled bucket; ``drain``
+   coalescing inherits this for free. The epoch key is the invalidation
+   hook: bumping ``engine.graph_epoch`` orphans every cached row (and the
+   landmark cache) without a scan.
+
+The ``warm_init`` phase registers here (backends ``none | landmark``) so
+``SsspConfig`` validates ``cfg.warm_start`` eagerly like every other phase
+backend. This module stays dependency-light (phases + jax) so both the
+engine and the sssp driver may import it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import phases
+
+INF = jnp.float32(jnp.inf)
+
+# Relative inflation applied to every triangle-inequality bound whose
+# landmark-to-source leg is nonzero. Float addition is non-associative, so
+# the two-leg sum ``land[l, src] + land[l, v]`` can land a few ULPs BELOW
+# the value the cold solve derives by relaxing edge-by-edge along the same
+# path — and the monotone pipeline would then keep the seed, breaking
+# bit-identity with the cold solve (observed: 1-ULP undershoots on the
+# road grid). Inflating by ~1.7e3 ULPs keeps the seed >= the cold fixpoint
+# for any realistic path length while costing a vanishing fraction of the
+# bound's pruning power. The ``land[l, src] == 0`` row (the source IS
+# landmark l — nothing else is at distance 0 with >= 1 weights) is NOT
+# inflated: ``0 + land[l, v]`` is bit-exactly that pivot's solved
+# fixpoint, which is what lets an exactly-repeated source converge in one
+# round instead of re-propagating the whole wave.
+WARM_EPS = jnp.float32(1.0 + 1e-4)
+
+
+# --------------------------------------------------------------------------
+# landmark cache
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LandmarkCache:
+    """L solved pivot sources, distances stored sharded like the carry.
+
+    ``dist[p, l, v]`` = distance from landmark ``l`` to local vertex ``v``
+    of shard ``p`` (``+inf`` where unreachable / padding). ``epoch`` ties
+    the cache to the graph state it was computed against."""
+
+    sources: tuple          # the L landmark source ids
+    dist: jax.Array         # [P, L, block] f32
+    epoch: int              # graph epoch this cache is valid for
+
+    @property
+    def n_landmarks(self) -> int:
+        return self.dist.shape[1]
+
+    @property
+    def nbytes_per_shard(self) -> int:
+        """The documented cost model: 4 B x L x block per shard."""
+        return 4 * self.dist.shape[1] * self.dist.shape[2]
+
+    def __repr__(self):
+        return (f"LandmarkCache(L={self.n_landmarks}, "
+                f"sources={self.sources}, epoch={self.epoch}, "
+                f"{self.nbytes_per_shard}B/shard)")
+
+
+def landmark_seed_stacked(land, sources, q_valid):
+    """Warm seed over the stacked sim representation.
+
+    ``land``: [P, L, block]; ``sources``: [K] int32 (traced); ``q_valid``:
+    [K] bool. Returns seed dist [P, K, block] =
+    ``min_l(land[l, src_k] + land[p, l, v])`` — +inf for invalid (padded)
+    queries, so they initialize exactly like the cold path."""
+    n_parts, n_land, block = land.shape
+    flat = jnp.swapaxes(land, 0, 1).reshape(n_land, n_parts * block)
+    at_src = flat[:, sources]                                   # [L, K]
+
+    def body(l, acc):
+        bound = at_src[l][None, :, None] + land[:, l][:, None, :]
+        bound = jnp.where(at_src[l][None, :, None] == 0.0, bound,
+                          bound * WARM_EPS)
+        return jnp.minimum(acc, bound)
+
+    seed = jax.lax.fori_loop(
+        0, n_land, body,
+        jnp.full((n_parts, sources.shape[0], block), INF, jnp.float32))
+    return jnp.where(q_valid[None, :, None], seed, INF)
+
+
+def landmark_seed_shard(land_loc, sources, q_valid, rank, block, min_all):
+    """Warm seed inside a shard_map body.
+
+    ``land_loc``: THIS shard's [L, block] landmark distances. The
+    landmark-at-source gather needs the owner shard's value, so each shard
+    contributes ``land[l, src_k]`` where it owns ``src_k`` (+inf
+    elsewhere) and ``min_all`` (an all-reduce min over the mesh — ONE
+    small [L, K] collective) replicates the result. Returns [K, block]."""
+    owner = sources // block
+    local = sources % block
+    mine = (owner == rank) & q_valid                            # [K]
+    contrib = jnp.where(mine[None, :], land_loc[:, local], INF)  # [L, K]
+    at_src = min_all(contrib)                                   # [L, K]
+    n_land = land_loc.shape[0]
+
+    def body(l, acc):
+        bound = at_src[l][:, None] + land_loc[l][None, :]
+        bound = jnp.where(at_src[l][:, None] == 0.0, bound, bound * WARM_EPS)
+        return jnp.minimum(acc, bound)
+
+    seed = jax.lax.fori_loop(
+        0, n_land, body,
+        jnp.full((sources.shape[0], land_loc.shape[1]), INF, jnp.float32))
+    return jnp.where(q_valid[:, None], seed, INF)
+
+
+# --------------------------------------------------------------------------
+# warm_init phase registry (config key: cfg.warm_start)
+# --------------------------------------------------------------------------
+
+class WarmInitStage(NamedTuple):
+    """Registry entry for a warm-init backend. ``needs_landmarks`` gates
+    the engine-side cache requirement; ``seed_stacked`` / ``seed_shard``
+    produce the traced seed-dist input ``_init_carry`` consumes (``None``
+    backends keep the cold +inf initialization)."""
+    name: str
+    needs_landmarks: bool
+    seed_stacked: Any   # (land, sources, q_valid) -> [P, K, block] | None
+    seed_shard: Any     # (land_loc, sources, q_valid, rank, block, min_all)
+
+
+phases.register("warm_init", "none")(WarmInitStage(
+    "none", needs_landmarks=False, seed_stacked=None, seed_shard=None))
+phases.register("warm_init", "landmark")(WarmInitStage(
+    "landmark", needs_landmarks=True, seed_stacked=landmark_seed_stacked,
+    seed_shard=landmark_seed_shard))
+
+
+# --------------------------------------------------------------------------
+# query-result LRU
+# --------------------------------------------------------------------------
+
+class CachedRow(NamedTuple):
+    """One solved query kept across calls: the full distance row. A cache
+    hit reports zero rounds/relaxations (THIS call did no work), so no
+    counters ride along."""
+    dist: np.ndarray        # [n_vertices] f32
+
+
+class ResultCache:
+    """Tiny LRU over solved (source, graph_epoch) rows.
+
+    ``get`` refreshes recency; ``put`` evicts the least-recently-used row
+    once ``maxsize`` is exceeded. ``maxsize == 0`` disables the cache
+    (every lookup misses, nothing is stored) so the engine's default
+    behavior is bit-for-bit the uncached path."""
+
+    def __init__(self, maxsize: int):
+        self.maxsize = int(maxsize)
+        self._rows: OrderedDict[tuple, CachedRow] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self):
+        return len(self._rows)
+
+    def get(self, source: int, epoch: int) -> CachedRow | None:
+        if self.maxsize == 0:
+            return None
+        row = self._rows.get((source, epoch))
+        if row is None:
+            self.misses += 1
+            return None
+        self._rows.move_to_end((source, epoch))
+        self.hits += 1
+        return row
+
+    def put(self, source: int, epoch: int, row: CachedRow) -> None:
+        if self.maxsize == 0:
+            return
+        self._rows[(source, epoch)] = row
+        self._rows.move_to_end((source, epoch))
+        while len(self._rows) > self.maxsize:
+            self._rows.popitem(last=False)
+
+    def clear(self) -> None:
+        self._rows.clear()

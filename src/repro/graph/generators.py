@@ -61,14 +61,18 @@ def road_grid_graph(side: int, seed: int = 0, diag_prob: float = 0.1,
     srcs, dsts = [], []
     # right and down neighbours
     right = vid.reshape(side, side)[:, :-1].ravel()
-    srcs.append(right); dsts.append(right + 1)
+    srcs.append(right)
+    dsts.append(right + 1)
     down = vid.reshape(side, side)[:-1, :].ravel()
-    srcs.append(down); dsts.append(down + side)
+    srcs.append(down)
+    dsts.append(down + side)
     # sparse diagonals
     diag = vid.reshape(side, side)[:-1, :-1].ravel()
     mask = rng.random(diag.shape[0]) < diag_prob
-    srcs.append(diag[mask]); dsts.append(diag[mask] + side + 1)
-    src = np.concatenate(srcs); dst = np.concatenate(dsts)
+    srcs.append(diag[mask])
+    dsts.append(diag[mask] + side + 1)
+    src = np.concatenate(srcs)
+    dst = np.concatenate(dsts)
     w = assign_weights(len(src), rng)
     src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
     w = np.concatenate([w, w])

@@ -17,7 +17,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
 
 
 def _embag_kernel(idx_ref, table_ref, out_ref, *, bb: int, L: int, mean: bool):

@@ -58,8 +58,21 @@ def main():
     p.add_argument("--delta", type=float, default=4.0)
     p.add_argument("--no-prune", action="store_true")
     p.add_argument("--backend", default="sim", choices=["sim", "shmap"])
+    p.add_argument("--warm-start", default="none",
+                   choices=["none", "landmark"],
+                   help="seed every query's distances from the landmark cache "
+                        "(triangle-inequality upper bounds; requires "
+                        "symmetric/undirected distances) instead of +inf")
+    p.add_argument("--landmarks", type=int, default=0,
+                   help="precompute this many landmark pivot solves before "
+                        "serving (required with --warm-start landmark)")
+    p.add_argument("--result-cache", type=int, default=0,
+                   help="LRU size for exact-repeat query results "
+                        "(0 disables; hits are served with zero rounds)")
     p.add_argument("--validate", action="store_true")
     args = p.parse_args()
+    if args.warm_start == "landmark" and args.landmarks < 1:
+        p.error("--warm-start landmark requires --landmarks N (N >= 1)")
 
     if args.graph == "rmat":
         g = rmat_graph(scale=args.scale, edge_factor=args.edge_factor, seed=0)
@@ -92,16 +105,28 @@ def main():
                      local_solver=args.solver, delta=args.delta,
                      send_backend=args.send_backend,
                      merge_backend=args.merge_backend,
+                     warm_start=args.warm_start,
                      prune_online=not args.no_prune)
     if args.backend == "sim":
-        engine = SsspEngine.build(sh, cfg)
+        engine = SsspEngine.build(sh, cfg, result_cache=args.result_cache)
     else:
         import jax
         from repro import compat
         n_dev = len(jax.devices())
         mesh = compat.make_mesh((n_dev,), ("data",))
         engine = SsspEngine.build(sh, cfg, backend="shmap", mesh=mesh,
-                                  axis_names=("data",))
+                                  axis_names=("data",),
+                                  result_cache=args.result_cache)
+    if args.landmarks:
+        rng = np.random.default_rng(7)
+        pivots = sorted(int(s) for s in
+                        rng.choice(g.n_vertices, size=args.landmarks,
+                                   replace=False))
+        t0 = time.time()
+        lm = engine.precompute_landmarks(pivots)
+        print(f"landmarks: {lm.n_landmarks} pivots solved in "
+              f"{time.time() - t0:.2f}s ({lm.nbytes_per_shard} B/shard; "
+              f"warm_start={cfg.warm_start})")
     res = engine.solve(sources)
     dists, stats = res.dist, res.stats
     dt = res.wall_s
@@ -111,7 +136,14 @@ def main():
           f"bucket K={res.bucket_k})  rounds={int(stats.rounds)} "
           f"relax={int(stats.relaxations)} msgs={int(stats.msgs_sent)} "
           f"pruned={int(stats.pruned_edges)}  MTEPS={mteps:.1f} "
-          f"queries/s={qps:.2f}")
+          f"queries/s={qps:.2f}"
+          + (" [warm-started]" if res.warm_started else ""))
+    if args.result_cache:
+        rerun = engine.solve(sources)
+        print(f"repeat solve: {rerun.wall_s * 1e3:.2f}ms "
+              f"cache_hits={rerun.cache_hits}/{len(sources)} "
+              f"rounds={int(rerun.stats.rounds)} (exact repeats ride the "
+              f"result LRU, zero rounds)")
     if batched:
         qr = np.asarray(stats.q_rounds)
         qx = np.asarray(stats.q_relaxations)

@@ -24,7 +24,7 @@ import numpy as np
 
 from repro import compat
 from repro.checkpoint import CheckpointManager
-from repro.configs.registry import ARCHS, _load
+from repro.configs.registry import _load
 from repro.data import TokenStream, RecsysBatcher
 from repro.distributed.sharding import MeshAxes
 from repro.launch.mesh import make_host_mesh

@@ -9,7 +9,6 @@ views in lock-step is what makes 40 dry-run cells tractable.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

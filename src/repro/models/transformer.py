@@ -348,7 +348,6 @@ def _layer(x, lp, cfg: TransformerConfig, ax: MeshAxes, positions, cache=None,
     if cache is None:
         o = attention(q, k, v, cfg, causal=True)
         new_cache = (k, v)
-        q_offset = 0
     else:
         ck, cv = cache           # [B, Skv, Hkv, Dh], decode: S == 1
         ck = lax.dynamic_update_slice(ck, k, (0, cache_pos, 0, 0))

@@ -4,7 +4,7 @@ import os
 # placeholder devices in a separate process). Keep CPU determinism.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-import jax  # noqa: E402
+import jax  # noqa: E402, F401  (initialize jax after JAX_PLATFORMS is set)
 import pytest  # noqa: E402
 
 

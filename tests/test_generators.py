@@ -46,7 +46,8 @@ def test_random_graph_connectivity_chain(n, m, seed):
 
 def test_dedup_keeps_min_weight():
     from repro.graph.structure import csr_from_coo
-    src = np.array([0, 0, 0]); dst = np.array([1, 1, 1])
+    src = np.array([0, 0, 0])
+    dst = np.array([1, 1, 1])
     w = np.array([5.0, 2.0, 9.0], np.float32)
     g = csr_from_coo(src, dst, w, 2)
     assert g.n_edges == 1

@@ -7,7 +7,7 @@ from _hyp import given, settings, strategies as st
 from repro.optim import (AdamWConfig, adamw_init, adamw_update,
                          clip_by_global_norm, cosine_schedule,
                          linear_warmup_cosine)
-from repro.data import TokenStream, RecsysBatcher, synthetic_lm_batch
+from repro.data import RecsysBatcher, synthetic_lm_batch
 from repro.graph import random_graph
 from repro.graph.sampler import NeighborSampler
 
@@ -16,7 +16,8 @@ def test_adamw_minimizes_quadratic():
     params = {"x": jnp.asarray([3.0, -2.0])}
     opt = adamw_init(params)
     cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
-    loss = lambda p: jnp.sum(p["x"] ** 2)
+    def loss(p):
+        return jnp.sum(p["x"] ** 2)
     for _ in range(200):
         g = jax.grad(loss)(params)
         params, opt, _ = adamw_update(params, g, opt, cfg)

@@ -5,7 +5,6 @@ from _hyp import given, settings, strategies as st
 from repro.core.partition import partition_1d
 from repro.core.shards import build_shards
 from repro.graph import random_graph
-from repro.graph.structure import graph_to_numpy
 
 
 @settings(max_examples=15, deadline=None)

@@ -3,7 +3,7 @@
 import jax
 import pytest
 
-from repro.configs.registry import (ARCHS, SHAPES, build_cell, list_cells)
+from repro.configs.registry import (ARCHS, build_cell, list_cells)
 from repro.distributed.sharding import MeshAxes
 
 

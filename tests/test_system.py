@@ -1,6 +1,5 @@
 """End-to-end behaviour: the paper's full pipeline and the training stack."""
 import numpy as np
-import pytest
 
 from repro.core import SsspConfig, build_shards, solve_sim
 from repro.graph import rmat_graph, road_grid_graph, dijkstra_reference

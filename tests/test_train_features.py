@@ -50,9 +50,12 @@ def test_flash_bwd_matches_xla_attention_grads():
     k = jnp.asarray(rng.standard_normal((B, S, Hkv, Dh)), jnp.float32)
     v = jnp.asarray(rng.standard_normal((B, S, Hkv, Dh)), jnp.float32)
     sc = Dh ** -0.5
-    f1 = lambda q, k, v: jnp.sum(jnp.sin(tf._attn_chunked(q, k, v, True, 0, sc, 16)))
-    f2 = lambda q, k, v: jnp.sum(jnp.sin(tf._attn_xla(q, k, v, causal=True,
-                                                      q_offset=0, scale=sc)))
+    def f1(q, k, v):
+        return jnp.sum(jnp.sin(tf._attn_chunked(q, k, v, True, 0, sc, 16)))
+
+    def f2(q, k, v):
+        return jnp.sum(jnp.sin(tf._attn_xla(q, k, v, causal=True,
+                                            q_offset=0, scale=sc)))
     g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
     g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
     for a, b in zip(g1, g2):

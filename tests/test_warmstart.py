@@ -1,0 +1,345 @@
+"""Warm-start subsystem: landmark cache, warm_init seeding, result LRU.
+
+The contract under test (the acceptance bar of the warm-start PR):
+  1. landmark seeds are true upper bounds, and warm-started solves are
+     BIT-identical to cold solves — distances and correctness — for
+     K in {1, 3}, across sim + shmap and all three exchange modes
+  2. a repeated source converges in strictly fewer rounds when seeded
+     from the landmark cache (its seed IS the solved fixpoint)
+  3. result-cache hits perform ZERO rounds and return the stored rows
+     bit-for-bit; cached sources are stripped from a batch BEFORE bucket
+     padding; the LRU evicts in recency order
+  4. graph-epoch invalidation orphans both caches
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import (CachedRow, LandmarkCache, ResultCache, SsspConfig,
+                        SsspEngine, build_shards, phases,
+                        shard_distance_rows)
+from repro.graph import dijkstra_reference, random_graph, road_grid_graph
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+EXCHANGES = ("bucket", "pmin", "a2a_dense")
+LANDMARKS = [0, 60, 120]
+
+
+@pytest.fixture(scope="module")
+def graph_and_shards():
+    g = random_graph(n=180, m=700, seed=21)
+    return g, build_shards(g, 5)
+
+
+def _warm_pair(sh, exchange="bucket", result_cache=0):
+    cold = SsspEngine.build(sh, SsspConfig(prune_online=False,
+                                           exchange=exchange))
+    warm = SsspEngine.build(sh, SsspConfig(prune_online=False,
+                                           exchange=exchange,
+                                           warm_start="landmark"),
+                            result_cache=result_cache)
+    warm.precompute_landmarks(LANDMARKS)
+    return cold, warm
+
+
+# ------------------------------------------------ config / registry ----
+
+def test_warm_start_validated_eagerly():
+    assert phases.backends("warm_init") == ("landmark", "none")
+    with pytest.raises(ValueError, match="warm_init"):
+        SsspConfig(warm_start="bogus")
+    assert SsspConfig().warm_start == "none"
+
+
+def test_shard_distance_rows_layout():
+    rows = np.arange(6, dtype=np.float32).reshape(2, 3)   # L=2, n=3
+    land = np.asarray(shard_distance_rows(rows, n_parts=2, block=2))
+    assert land.shape == (2, 2, 2)                         # [P, L, block]
+    assert land[0, 0].tolist() == [0.0, 1.0]
+    assert land[1, 0, 0] == 2.0 and np.isinf(land[1, 0, 1])  # pad vertex
+    assert land[1, 1, 0] == 5.0
+
+
+def test_landmark_cache_metadata(graph_and_shards):
+    _, sh = graph_and_shards
+    _, warm = _warm_pair(sh)
+    lm = warm.landmarks
+    assert isinstance(lm, LandmarkCache)
+    assert lm.sources == tuple(LANDMARKS) and lm.epoch == 0
+    assert lm.n_landmarks == len(LANDMARKS)
+    # the documented cost model: 4 B x L x block per shard
+    assert lm.nbytes_per_shard == 4 * len(LANDMARKS) * sh.block
+    assert lm.dist.shape == (sh.n_parts, len(LANDMARKS), sh.block)
+    with pytest.raises(ValueError, match="at least one landmark"):
+        warm.precompute_landmarks([])
+
+
+# ------------------------------------------------- seed correctness ----
+
+def test_seed_is_upper_bound(graph_and_shards):
+    """The triangle-inequality seed must dominate the true distances —
+    this is what makes warm-started fixpoints exact."""
+    g, sh = graph_and_shards
+    _, warm = _warm_pair(sh)
+    from repro.core.warmstart import landmark_seed_stacked
+    sources = np.asarray([3, 99], np.int32)
+    seed = np.asarray(landmark_seed_stacked(
+        warm.landmarks.dist, sources, np.ones(2, bool)))
+    seed = np.moveaxis(seed, 0, 1).reshape(2, -1)[:, : g.n_vertices]
+    for k, s in enumerate([3, 99]):
+        ref = dijkstra_reference(g, s)
+        finite = np.isfinite(seed[k])
+        assert np.all(seed[k][finite] >= ref[finite] - 1e-6)
+        # a finite seed may only appear where the vertex is reachable
+        assert np.all(np.isfinite(ref[finite]))
+
+
+@pytest.mark.parametrize("exchange", EXCHANGES)
+@pytest.mark.parametrize("nq", [1, 3])
+def test_warm_bit_identical_to_cold_sim(graph_and_shards, exchange, nq):
+    g, sh = graph_and_shards
+    cold, warm = _warm_pair(sh, exchange)
+    rng = np.random.default_rng(5)
+    sources = sorted(int(s) for s in
+                     rng.choice(g.n_vertices, size=nq, replace=False))
+    rc, rw = cold.solve(sources), warm.solve(sources)
+    assert rw.warm_started and not rc.warm_started
+    assert np.array_equal(rc.dist, rw.dist)
+    refs = np.stack([dijkstra_reference(g, s) for s in sources])
+    np.testing.assert_allclose(rw.dist, refs, rtol=1e-5, atol=1e-4)
+
+
+def test_repeated_source_converges_in_fewer_rounds():
+    """A repeated source's seed IS its solved fixpoint: the warm solve
+    confirms quiescence in ~1 round instead of re-propagating the wave
+    (the road grid has the deep round structure that makes this visible).
+    """
+    g = road_grid_graph(side=24, seed=2)
+    sh = build_shards(g, 8, enumerate_triangles=False)
+    cold = SsspEngine.build(sh, SsspConfig(prune_online=False))
+    warm = SsspEngine.build(sh, SsspConfig(prune_online=False,
+                                           warm_start="landmark"))
+    warm.precompute_landmarks([0, 287])
+    rc, rw = cold.solve([287]), warm.solve([287])
+    assert np.array_equal(rc.dist, rw.dist)
+    assert int(rw.q_rounds[0]) < int(rc.q_rounds[0])
+    assert int(rw.q_rounds[0]) <= 2
+
+
+def test_warm_without_landmarks_stays_cold(graph_and_shards):
+    """warm_start='landmark' with no precomputed cache must not fail —
+    solves run cold until the cache exists."""
+    g, sh = graph_and_shards
+    eng = SsspEngine.build(sh, SsspConfig(warm_start="landmark"))
+    res = eng.solve([3])
+    assert not res.warm_started
+    np.testing.assert_allclose(res.dist[0], dijkstra_reference(g, 3),
+                               rtol=1e-5, atol=1e-4)
+
+
+# ----------------------------------------------------- result cache ----
+
+def test_result_cache_lru_semantics():
+    lru = ResultCache(2)
+    row = CachedRow(np.zeros(3, np.float32))
+    assert lru.get(1, 0) is None and lru.misses == 1
+    lru.put(1, 0, row)
+    lru.put(2, 0, row)
+    assert lru.get(1, 0) is row and lru.hits == 1
+    lru.put(3, 0, row)               # evicts 2 (LRU), keeps refreshed 1
+    assert lru.get(2, 0) is None
+    assert lru.get(1, 0) is row and lru.get(3, 0) is row
+    assert len(lru) == 2
+    # epoch is part of the key: a bumped epoch misses
+    assert lru.get(1, 1) is None
+    # size 0 disables storage entirely
+    off = ResultCache(0)
+    off.put(1, 0, row)
+    assert off.get(1, 0) is None and len(off) == 0
+
+
+def test_exact_repeat_zero_rounds(graph_and_shards):
+    g, sh = graph_and_shards
+    eng = SsspEngine.build(sh, SsspConfig(prune_online=False),
+                           result_cache=8)
+    first = eng.solve([3, 17])
+    assert first.cache_hits == 0
+    hit = eng.solve([3, 17])
+    assert hit.cache_hits == 2 and hit.bucket_k == 0
+    assert int(hit.stats.rounds) == 0
+    assert np.array_equal(hit.q_rounds, [0, 0])
+    assert np.array_equal(hit.dist, first.dist)
+    assert not hit.compiled and hit.compile_s == 0.0
+
+
+def test_cached_sources_stripped_before_padding(graph_and_shards):
+    """A partially-cached batch rides the bucket of its UNCACHED remainder
+    — the strip happens before power-of-two padding."""
+    g, sh = graph_and_shards
+    eng = SsspEngine.build(sh, SsspConfig(prune_online=False),
+                           result_cache=8)
+    eng.solve([3, 17, 99])                      # populate (bucket 4)
+    mixed = eng.solve([3, 40, 17, 99, 41])      # 3 cached + 2 new
+    assert mixed.cache_hits == 3
+    assert mixed.bucket_k == 2                  # bucket of the remainder
+    refs = np.stack([dijkstra_reference(g, s) for s in [3, 40, 17, 99, 41]])
+    np.testing.assert_allclose(mixed.dist, refs, rtol=1e-5, atol=1e-4)
+    # cached rows did zero rounds THIS call; new rows did real rounds
+    assert mixed.q_rounds[0] == 0 and mixed.q_rounds[2] == 0
+    assert mixed.q_rounds[1] > 0 and mixed.q_rounds[4] > 0
+
+
+def test_duplicate_sources_coalesce_with_cache(graph_and_shards):
+    g, sh = graph_and_shards
+    eng = SsspEngine.build(sh, SsspConfig(prune_online=False),
+                           result_cache=8)
+    res = eng.solve([5, 5, 5])                  # dedupe -> one K=1 solve
+    assert res.bucket_k == 1
+    assert np.array_equal(res.dist[0], res.dist[1])
+    ref = dijkstra_reference(g, 5)
+    np.testing.assert_allclose(res.dist[2], ref, rtol=1e-5, atol=1e-4)
+
+
+def test_cache_off_is_bitcompatible_default(graph_and_shards):
+    """result_cache=0 (the default) must be the exact pre-cache behavior:
+    repeats re-solve, nothing is stored."""
+    g, sh = graph_and_shards
+    eng = SsspEngine.build(sh, SsspConfig(prune_online=False))
+    a, b = eng.solve([3]), eng.solve([3])
+    assert b.cache_hits == 0 and int(b.stats.rounds) > 0
+    assert np.array_equal(a.dist, b.dist)
+    assert len(eng.result_cache) == 0
+
+
+def test_drain_rides_result_cache(graph_and_shards):
+    """submit/drain inherits the strip: already-cached submissions drain
+    without solving (zero rounds), per-handle slicing stays correct."""
+    g, sh = graph_and_shards
+    eng = SsspEngine.build(sh, SsspConfig(prune_online=False),
+                           result_cache=8, max_bucket=4)
+    eng.solve([3, 17])
+    h1, h2 = eng.submit(3), eng.submit([17, 40])
+    eng.drain()
+    r1, r2 = h1.result(), h2.result()
+    assert int(r1.q_rounds[0]) == 0              # fully cached row
+    assert int(r2.q_rounds[0]) == 0 and int(r2.q_rounds[1]) > 0
+    np.testing.assert_allclose(r2.dist[1], dijkstra_reference(g, 40),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_warmup_bypasses_result_cache(graph_and_shards):
+    """warmup(k) must compile the FULL bucket even though its repeated
+    probe sources would dedupe to K=1 through the cache layer."""
+    _, sh = graph_and_shards
+    eng = SsspEngine.build(sh, SsspConfig(prune_online=False),
+                           result_cache=8)
+    assert eng.warmup(4) > 0
+    assert eng.trace_counts == {4: 1}
+    assert not eng.solve([7, 8, 9]).compiled
+
+
+def test_warmup_covers_sim_seed_program(graph_and_shards):
+    """On a warm sim engine the seed program is separate from the round:
+    a cold trace of the bucket (from precompute) must not let warmup()
+    report 0.0 while the seed still compiles at first serve."""
+    _, sh = graph_and_shards
+    eng = SsspEngine.build(sh, SsspConfig(prune_online=False,
+                                          warm_start="landmark"))
+    eng.precompute_landmarks([0, 60])        # cold path traces bucket 2
+    assert eng.warmup(2) > 0                 # warm seed still cold
+    res = eng.solve([7, 8])
+    assert res.warm_started and not res.compiled
+    assert eng.warmup(2) == 0.0
+
+
+def test_precompute_rejects_asymmetric_distances():
+    """The triangle-inequality seed needs d(src,l) but only has d(l,src);
+    a directed graph whose pivot cross-distances expose the asymmetry must
+    be rejected instead of silently under-seeding solves."""
+    g = random_graph(n=120, m=600, seed=3, undirected=False)
+    eng = SsspEngine.build(build_shards(g, 4, enumerate_triangles=False),
+                           SsspConfig(warm_start="landmark"))
+    with pytest.raises(ValueError, match="symmetric"):
+        eng.precompute_landmarks([0, 5, 9])
+
+
+# ------------------------------------------------------ invalidation ----
+
+def test_epoch_invalidation_orphans_both_caches(graph_and_shards):
+    g, sh = graph_and_shards
+    _, warm = _warm_pair(sh, result_cache=8)
+    warm.solve([3])
+    hit = warm.solve([3])
+    assert hit.cache_hits == 1
+    assert warm.invalidate_caches() == 1
+    assert warm.landmarks is None and len(warm.result_cache) == 0
+    miss = warm.solve([3])
+    assert miss.cache_hits == 0 and not miss.warm_started
+    np.testing.assert_allclose(miss.dist[0], dijkstra_reference(g, 3),
+                               rtol=1e-5, atol=1e-4)
+    # re-precompute restores warm serving under the new epoch
+    warm.precompute_landmarks(LANDMARKS)
+    assert warm.landmarks.epoch == 1
+    assert warm.solve([9]).warm_started
+
+
+# ----------------------------------------------------- shmap parity ----
+
+_SHMAP_WARM_PROG = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import numpy as np
+    from repro import compat
+    from repro.core import SsspConfig, SsspEngine, build_shards
+    from repro.graph import random_graph
+
+    g = random_graph(n=180, m=700, seed=21)
+    sh = build_shards(g, 4)
+    mesh = compat.make_mesh((4,), ("d",))
+    for ex in ("bucket", "pmin", "a2a_dense"):
+        cold = SsspEngine.build(sh, SsspConfig(exchange=ex), backend="shmap",
+                                mesh=mesh, axis_names=("d",))
+        warm = SsspEngine.build(sh, SsspConfig(exchange=ex,
+                                               warm_start="landmark"),
+                                backend="shmap", mesh=mesh,
+                                axis_names=("d",), result_cache=8)
+        warm.precompute_landmarks([0, 60, 120])
+        for srcs in ([3], [17, 99, 150]):
+            rc, rw = cold.solve(srcs), warm.solve(srcs)
+            assert rw.warm_started, (ex, srcs)
+            assert np.array_equal(rc.dist, rw.dist), (ex, srcs)
+        rc = cold.solve([60])
+        rw = warm._solve_batch((60,))      # bypass LRU: seed-path rounds
+        assert np.array_equal(rc.dist, rw.dist), ex
+        assert int(rw.q_rounds[0]) < int(rc.q_rounds[0]), ex
+        hit = warm.solve([60])
+        assert hit.cache_hits == 1 and int(hit.stats.rounds) == 0, ex
+    # warmup must compile the WARM whole-solve program: the cold trace of
+    # the same bucket (from precompute_landmarks) does not cover it
+    weng = SsspEngine.build(sh, SsspConfig(warm_start="landmark"),
+                            backend="shmap", mesh=mesh, axis_names=("d",))
+    weng.precompute_landmarks([0, 60, 120])    # cold program, bucket 4
+    assert weng.warmup(3) > 0                  # warm program still cold
+    r = weng.solve([5, 6, 7])
+    assert r.warm_started and not r.compiled
+    assert weng.warmup(3) == 0.0
+    print("SHMAP WARM OK")
+""")
+
+
+def test_warm_bit_identical_shmap():
+    """shmap: landmark-seeded solves bit-match cold across all exchange
+    modes; repeated pivots converge in fewer rounds; LRU hits skip the
+    solve (subprocess: device count must be set before jax init)."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SHMAP_WARM_PROG], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "SHMAP WARM OK" in out.stdout
