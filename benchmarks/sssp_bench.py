@@ -15,8 +15,8 @@ import time
 import jax
 import numpy as np
 
-from repro.core import (SsspConfig, SsspEngine, build_shards, engine_for,
-                        sim_phase_fns, solve_sim, solve_sim_batch)
+from repro.core import (FaultPlan, SsspConfig, SsspEngine, build_shards,
+                        engine_for, sim_phase_fns, solve_sim, solve_sim_batch)
 from repro.core import sssp as sssp_mod
 from repro.graph import rmat_graph, road_grid_graph, dijkstra_reference
 
@@ -276,6 +276,45 @@ def bench_warm_start(out):
             f"hits={hit.cache_hits}")
 
 
+def bench_faults(out):
+    """Resilience economics: rounds-to-converge and resend overhead vs
+    drop rate, under anti-entropy healing with the toka3 timeout detector.
+
+    Every faulted record carries TWO hard asserts — distances bit-identical
+    to the fault-free solve and ``status == "converged"`` (the engine's
+    fixpoint certificate, not the detector's word) — so this section is a
+    correctness gate for the whole fault/recovery/termination stack, not
+    just a perf artifact. ``resend_overhead`` is the fraction of all sent
+    messages that were anti-entropy retransmissions: the price of healing
+    at that drop rate."""
+    g = BENCH_GRAPHS["graph2-like"]()    # road grid: real round depth
+    source = int(g.src[0])
+    sh = build_shards(g, 8, enumerate_triangles=False)
+    base_eng = SsspEngine.build(sh, SsspConfig(prune_online=False))
+    base = base_eng.solve(source)
+    out(f"faults[drop=0.0][toka0]", base.wall_s * 1e6,
+        f"rounds={int(base.stats.rounds)} resends=0 overhead=0.00 "
+        f"status={base.status}")
+    for drop in (0.1, 0.3):
+        for toka in ("toka0", "toka3"):
+            cfg = SsspConfig(prune_online=False, toka=toka,
+                             faults=FaultPlan(drop=drop, seed=5,
+                                              resend_period=4))
+            eng = SsspEngine.build(sh, cfg)
+            res = eng.solve(source)
+            assert np.array_equal(res.dist, base.dist), \
+                f"faulted solve (drop={drop}, {toka}) lost bit-identity"
+            assert res.status == "converged", \
+                f"faulted solve (drop={drop}, {toka}) did not certify"
+            overhead = int(res.stats.resends) / max(int(res.stats.msgs_sent),
+                                                    1)
+            out(f"faults[drop={drop}][{toka}]", res.wall_s * 1e6,
+                f"rounds={int(res.stats.rounds)} "
+                f"base_rounds={int(base.stats.rounds)} "
+                f"resends={int(res.stats.resends)} "
+                f"overhead={overhead:.2f} status={res.status}")
+
+
 def _block(x):
     return jax.tree_util.tree_map(
         lambda a: a.block_until_ready() if hasattr(a, "block_until_ready")
@@ -347,6 +386,7 @@ def run_all(out):
     bench_batch_throughput(out)
     bench_engine_serving(out)
     bench_warm_start(out)
+    bench_faults(out)
     bench_phase_breakdown(out)
 
 
@@ -377,6 +417,7 @@ def run_smoke(out):
     try:
         bench_engine_serving(smoke_out)
         bench_warm_start(smoke_out)
+        bench_faults(smoke_out)
     finally:
         BENCH_GRAPHS = full
 

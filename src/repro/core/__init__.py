@@ -1,10 +1,12 @@
 from repro.core.sssp import (RoundPipeline, SsspConfig, SsspStats,
-                             build_pipeline, build_shmap_solver,
-                             build_shmap_solver_traced, sim_phase_fns,
+                             build_pipeline, build_shmap_certificate,
+                             build_shmap_solver, build_shmap_solver_traced,
+                             certificate_improved_sim, sim_phase_fns,
                              solve_shmap, solve_shmap_batch, solve_sim,
                              solve_sim_batch)
 from repro.core.engine import (QueryHandle, QueryResult, SsspEngine,
                                bucket_k, engine_for)
+from repro.core.faults import FaultPlan, FaultState, wrap_exchange
 from repro.core.shards import SsspShards, build_shards, shard_distance_rows
 from repro.core.warmstart import CachedRow, LandmarkCache, ResultCache
 from repro.core.partition import partition_1d, inter_edge_counts

@@ -55,7 +55,9 @@ from repro.core import phases
 from repro.core.shards import SsspShards, build_shards, shard_distance_rows
 from repro.core.sssp import (SimComm, SsspConfig, SsspStats, _as_sources,
                              _init_carry, _make_round,
-                             build_shmap_solver_traced)
+                             build_shmap_certificate,
+                             build_shmap_solver_traced,
+                             certificate_improved_sim)
 from repro.core.warmstart import CachedRow, LandmarkCache, ResultCache
 
 
@@ -76,7 +78,22 @@ class QueryResult:
     (padded bucket rows already sliced away); ``stats`` carries the same
     per-query columns plus the aggregate totals. ``compile_s`` is the
     cold-start cost (first invocation of this bucket's program, tracing and
-    XLA compilation included) and is 0.0 on warm calls."""
+    XLA compilation included) and is 0.0 on warm calls.
+
+    ``status`` replaces the old silent ``max_rounds`` truncation:
+
+    - ``"converged"``  — every query passed the fixpoint certificate (one
+      extra unmasked relax round produced no improvement); distances are
+      exact.
+    - ``"max_rounds"`` — the round budget ran out before the detectors
+      fired for some query; distances are upper bounds.
+    - ``"degraded"``   — a detector declared termination but the
+      certificate found a remaining improvement (e.g. a dropped message
+      under ``FaultPlan(resend_period=0)``); distances are upper bounds.
+
+    Per-query resolution lives in ``stats.q_converged`` /
+    :attr:`q_converged`. Non-converged results are never admitted to the
+    result LRU or the landmark cache."""
 
     dist: np.ndarray            # [K, n_vertices] per-query distances
     sources: tuple              # the K query sources, as submitted
@@ -88,6 +105,7 @@ class QueryResult:
     compiled: bool              # True iff this call traced a new program
     cache_hits: int = 0         # queries answered from the result cache
     warm_started: bool = False  # landmark-seeded (vs cold +inf) init
+    status: str = "converged"   # converged | max_rounds | degraded
 
     @property
     def q_rounds(self) -> np.ndarray:
@@ -96,6 +114,10 @@ class QueryResult:
     @property
     def q_relaxations(self) -> np.ndarray:
         return np.asarray(self.stats.q_relaxations)
+
+    @property
+    def q_converged(self) -> np.ndarray:
+        return np.asarray(self.stats.q_converged)
 
 
 class QueryHandle:
@@ -129,7 +151,7 @@ class SsspEngine:
 
     def __init__(self, shards: SsspShards, cfg: SsspConfig, backend: str,
                  mesh=None, axis_names=None, max_bucket: int = 16,
-                 result_cache: int = 0):
+                 result_cache: int = 0, certify: bool = True):
         if backend not in ("sim", "shmap"):
             raise ValueError(f"unknown backend {backend!r}; valid: "
                              "['shmap', 'sim']")
@@ -175,6 +197,13 @@ class SsspEngine:
         # them (a trace-time side effect, so reuse is directly assertable)
         self.trace_counts: dict[int, int] = {}
         self._compile_s: dict[int, float] = {}
+        # fixpoint certificate: one extra unmasked relax round over the
+        # final distances gates QueryResult.status. Its program is traced
+        # once per bucket but counted SEPARATELY (cert_traces) — the
+        # compile-reuse tests pin trace_counts to solver traces only.
+        self.certify = bool(certify)
+        self.cert_traces = 0
+        self._cert_shmap = None     # lazily built shmap certificate
         if backend == "sim":
             base_round = _make_round(shards, cfg, SimComm(shards.n_parts),
                                      vmapped=True, n_parts=shards.n_parts)
@@ -183,10 +212,16 @@ class SsspEngine:
                 self._note_trace(int(carry.dist.shape[1]))
                 return base_round(carry)
 
+            def counted_cert(dist_pk):
+                self.cert_traces += 1
+                return certificate_improved_sim(shards, dist_pk)
+
             self.round_fn = jax.jit(counted_round)
+            self._cert_fn = jax.jit(counted_cert)
             self.shmap_solver = None
         else:
             self.round_fn = None
+            self._cert_fn = None
             self.shmap_solver = build_shmap_solver_traced(
                 shards, cfg, mesh, self.axis_names, on_trace=self._note_trace)
 
@@ -196,7 +231,7 @@ class SsspEngine:
     def build(cls, graph_or_shards, cfg: SsspConfig | None = None,
               backend: str = "sim", mesh=None, axis_names=None, *,
               n_parts: int = 8, max_bucket: int = 16, result_cache: int = 0,
-              **shard_kwargs) -> "SsspEngine":
+              certify: bool = True, **shard_kwargs) -> "SsspEngine":
         """Create a session over a :class:`SsspShards` (used as-is) or a
         :class:`~repro.graph.structure.Graph` (partitioned here with
         ``n_parts`` and any ``build_shards`` keyword). ``result_cache``
@@ -210,7 +245,8 @@ class SsspEngine:
         else:
             sh = build_shards(graph_or_shards, n_parts, **shard_kwargs)
         return cls(sh, cfg or SsspConfig(), backend, mesh, axis_names,
-                   max_bucket=max_bucket, result_cache=result_cache)
+                   max_bucket=max_bucket, result_cache=result_cache,
+                   certify=certify)
 
     @property
     def n_vertices(self) -> int:
@@ -303,6 +339,8 @@ class SsspEngine:
                 r += 1
                 if bool(np.asarray(carry.done).all()):
                     break
+            dist_pk = carry.dist
+            done_k = np.asarray(carry.done)[0][:k]  # globally agreed
             # [P, K, block] -> per-query global distance vectors
             dist = np.moveaxis(np.asarray(carry.dist), 0, 1)
             dist = dist.reshape(kb, -1)[:k, : self.shards.n_vertices]
@@ -314,7 +352,9 @@ class SsspEngine:
                 pruned_edges=np.sum(carry.pruned, dtype=np.int32),
                 q_rounds=np.max(np.asarray(carry.q_rounds), axis=0)[:k],
                 q_relaxations=np.sum(np.asarray(carry.relaxations),
-                                     axis=0)[:k])
+                                     axis=0)[:k],
+                stale_merges=np.sum(np.asarray(carry.stale), dtype=np.int32),
+                resends=np.sum(np.asarray(carry.resent), dtype=np.int32))
         else:
             tc = time.perf_counter()
             if warm:
@@ -337,10 +377,39 @@ class SsspEngine:
             jax.block_until_ready(dist_pk)
             if self.trace_count > traces0:
                 compile_s = time.perf_counter() - tc
+            done_k = np.asarray(stats.q_converged)[:k]
             dist = np.moveaxis(np.asarray(dist_pk), 0, 1)   # [K, P, block]
             dist = dist.reshape(kb, -1)[:k, : self.shards.n_vertices]
             stats = stats._replace(q_rounds=stats.q_rounds[:k],
                                    q_relaxations=stats.q_relaxations[:k])
+
+        # fixpoint certificate: the detectors' word (done_k) is a claim;
+        # one extra unmasked relax round is the proof. Certified truth
+        # overrides the detector in BOTH directions — a run that exhausted
+        # max_rounds at the fixpoint is converged, a detector that fired
+        # over a dropped message is not.
+        if self.certify:
+            if self.backend == "sim":
+                improved = np.asarray(self._cert_fn(dist_pk))[:k]
+            else:
+                if self._cert_shmap is None:
+                    self._cert_shmap = build_shmap_certificate(
+                        self.shards, self.mesh, self.axis_names,
+                        on_trace=lambda _k: setattr(
+                            self, "cert_traces", self.cert_traces + 1))
+                improved = np.asarray(
+                    self._cert_shmap(self.shards, dist_pk))[:k]
+            q_conv = ~improved
+        else:
+            q_conv = done_k.copy()
+        if bool(q_conv.all()):
+            status = "converged"
+        elif bool((~q_conv & ~done_k).any()):
+            status = "max_rounds"
+        else:
+            status = "degraded"
+        stats = stats._replace(q_converged=q_conv)
+
         wall_s = time.perf_counter() - t0
         compiled = self.trace_count > traces0
         if compiled:
@@ -350,7 +419,7 @@ class SsspEngine:
         return QueryResult(dist=dist, sources=srcs, stats=stats, bucket_k=kb,
                            backend=self.backend, wall_s=wall_s,
                            compile_s=compile_s, compiled=compiled,
-                           warm_started=warm)
+                           warm_started=warm, status=status)
 
     def _solve_cached(self, srcs: tuple, *, bucket: bool) -> QueryResult:
         """Result-cache layer over ``_solve_batch``: strip the sources the
@@ -370,6 +439,12 @@ class SsspEngine:
         if uncached:
             raw = self._solve_batch(tuple(uncached), bucket=bucket)
             for i, s in enumerate(uncached):
+                # graceful degradation: only certified-converged rows may
+                # enter the LRU — a degraded/max_rounds row is an upper
+                # bound, and a cache would launder it into later batches
+                # as if it were exact
+                if not bool(raw.stats.q_converged[i]):
+                    continue
                 # copy: a view would pin the whole [kb, n] batch array in
                 # the LRU for as long as any one of its rows stays cached
                 self.result_cache.put(s, epoch,
@@ -380,6 +455,7 @@ class SsspEngine:
         dist = np.empty((k, self.shards.n_vertices), np.float32)
         q_rounds = np.zeros((k,), np.int32)
         q_relax = np.zeros((k,), np.int32)
+        q_conv = np.ones((k,), bool)    # LRU rows were certified on entry
         n_hit = 0
         for j, s in enumerate(srcs):
             if s in hits:
@@ -390,15 +466,19 @@ class SsspEngine:
                 dist[j] = raw.dist[i]
                 q_rounds[j] = raw.q_rounds[i]
                 q_relax[j] = raw.q_relaxations[i]
+                q_conv[j] = bool(raw.stats.q_converged[i])
         zero = np.int32(0)
         if raw is not None:
             stats = raw.stats._replace(q_rounds=q_rounds,
-                                       q_relaxations=q_relax)
+                                       q_relaxations=q_relax,
+                                       q_converged=q_conv)
         else:
             # every source served from the LRU: zero rounds, no program run
             stats = SsspStats(rounds=zero, relaxations=zero, msgs_sent=zero,
                               msgs_recv=zero, pruned_edges=zero,
-                              q_rounds=q_rounds, q_relaxations=q_relax)
+                              q_rounds=q_rounds, q_relaxations=q_relax,
+                              q_converged=q_conv, stale_merges=zero,
+                              resends=zero)
             self.batches_served += 1
         # _solve_batch already counted the uncached subset it ran
         self.queries_served += k - len(uncached)
@@ -409,7 +489,8 @@ class SsspEngine:
             compile_s=raw.compile_s if raw is not None else 0.0,
             compiled=raw.compiled if raw is not None else False,
             cache_hits=n_hit,
-            warm_started=raw.warm_started if raw is not None else False)
+            warm_started=raw.warm_started if raw is not None else False,
+            status=raw.status if raw is not None else "converged")
 
     # ------------------------------------------------------ warm start ----
 
@@ -435,6 +516,20 @@ class SsspEngine:
         if len(srcs) < 1:
             raise ValueError("at least one landmark source is required")
         res = self._solve_batch(tuple(dict.fromkeys(srcs)), use_warm=False)
+        # landmark rows seed EVERY later solve: admit only certified
+        # fixpoints (a degraded pivot row could under-bound d(l, src) +
+        # d(l, v) nowhere but over-bound it everywhere — still wrong as a
+        # "converges bit-identically" warm start), and never NaN (one NaN
+        # seed poisons every distance downstream of it)
+        if res.status != "converged":
+            raise ValueError(
+                f"landmark precompute did not converge (status="
+                f"{res.status!r}): refusing to cache non-fixpoint seeds — "
+                "raise max_rounds or fix the fault/termination config")
+        if np.isnan(res.dist).any():
+            raise ValueError(
+                "landmark precompute produced NaN distances: the seed rows "
+                "are not finite upper bounds (check edge weights)")
         cross = res.dist[:, list(res.sources)]      # [L, L] pivot pairs
         if not np.allclose(cross, cross.T, rtol=1e-4, atol=1e-4):
             raise ValueError(
@@ -529,11 +624,14 @@ class SsspEngine:
             for h in group:
                 kk = len(h.sources)
                 sl = slice(off, off + kk)
+                conv = np.asarray(batch.stats.q_converged)[sl]
                 h._result = dataclasses.replace(
                     batch, dist=batch.dist[sl], sources=h.sources,
+                    status="converged" if bool(conv.all()) else batch.status,
                     stats=batch.stats._replace(
                         q_rounds=batch.stats.q_rounds[sl],
-                        q_relaxations=batch.stats.q_relaxations[sl]))
+                        q_relaxations=batch.stats.q_relaxations[sl],
+                        q_converged=conv))
                 results.append(h._result)
                 off += kk
         return results

@@ -1,0 +1,224 @@
+"""Fault injection for the SP-Async exchange — the paper's robustness claim
+made executable.
+
+The paper argues the asynchronous mode is safe because the scatter-min
+merge is monotone and idempotent: a dropped, delayed, duplicated, or
+reordered message can change *round counts* but never the fixpoint. Until
+this module nothing exercised that claim — every exchange delivered every
+payload, in order, exactly once. :class:`FaultPlan` describes a message
+failure model and :func:`wrap_exchange` decorates any resolved
+``ExchangeStage`` backend (``bucket`` / ``pmin`` / ``a2a_dense``) with a
+*receiver-side* injector, so any existing pipeline runs under faults via
+``SsspConfig(faults=FaultPlan(...))`` on both the sim and shmap backends.
+
+Fault model (per message position, per round, receiver side)
+------------------------------------------------------------
+Randomness is a deterministic ``jax.random`` stream: one key per
+``(config seed, round, receiving shard)`` via ``fold_in``, so a seeded run
+replays bit-exactly on either backend. Each *finite* incoming value draws
+one uniform and lands in exactly one regime:
+
+- ``drop``      — the message is lost. If it would have improved the
+  receiver (``val < dist[target]``) the loss *matters* and is tracked in
+  ``unhealed`` until the next anti-entropy resend retransmits every
+  ``last_sent`` minimum (see ``FaultPlan.resend_period`` and the resend
+  wiring in ``core/sssp.py``). Harmless drops (stale values) are forgotten.
+- ``delay``     — the message is withheld and enqueued into a *bounded
+  in-carry queue* (depth ``max_delay``) at a random slot; it re-merges
+  1..max_delay rounds later, exercising the stale-merge path for real.
+- ``duplicate`` — the message is delivered now AND a copy is enqueued, so
+  the same value merges again later (idempotence under late duplicates).
+- ``reorder``   — the message is withheld and enqueued at the head slot:
+  it arrives one round late, *after* messages sent a round later
+  (out-of-order delivery under the commutative merge).
+
+The queue's oldest slot is released every round and min-merged with the
+fresh deliveries — position ``m`` always addresses the same destination
+vertex, so the release IS a stale scatter-min merge. ``pending`` reports,
+per query, whether this shard still holds undelivered state (non-empty
+queue, or an unhealed mattering drop when anti-entropy is on): the round
+feeds it into the termination stage so no detector can declare quiescence
+over in-flight messages.
+
+Injection is on the *receiving* side of the collective: for the dense
+exchanges the transferred payload is already reduced over senders, so a
+fault there models losing the combined update — the same observable a
+receiver-side loss produces on a real transport.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.float32(jnp.inf)
+
+_PROBS = ("drop", "delay", "duplicate", "reorder")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Message failure model + recovery knobs (hashable: rides in
+    ``SsspConfig`` and therefore in every engine/jit cache key).
+
+    ``drop``/``delay``/``duplicate``/``reorder`` are per-message
+    probabilities (disjoint regimes; their sum must be <= 1). ``seed``
+    roots the deterministic per-round `jax.random` stream. ``max_delay``
+    bounds the in-carry delay queue (a delayed message re-merges within
+    that many rounds). ``resend_period > 0`` enables anti-entropy: every
+    N-th round senders retransmit ALL their ``last_sent`` minima, so a
+    dropped improvement is provably healed instead of accidentally masked
+    — with ``resend_period=0`` drops are permanent and the engine's
+    fixpoint certificate reports the solve as ``degraded``."""
+
+    drop: float = 0.0
+    delay: float = 0.0
+    duplicate: float = 0.0
+    reorder: float = 0.0
+    seed: int = 0
+    max_delay: int = 3
+    resend_period: int = 0
+
+    def __post_init__(self):
+        for name in _PROBS:
+            p = float(getattr(self, name))
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"FaultPlan.{name}={p!r} must be in [0, 1]")
+        total = sum(float(getattr(self, n)) for n in _PROBS)
+        if total > 1.0:
+            raise ValueError(
+                f"FaultPlan probabilities sum to {total:.3f} > 1 (each "
+                "message lands in exactly one fault regime)")
+        if self.max_delay < 1:
+            raise ValueError("FaultPlan.max_delay must be >= 1")
+        if self.resend_period < 0:
+            raise ValueError("FaultPlan.resend_period must be >= 0")
+
+    @property
+    def active(self) -> bool:
+        """Any fault probability non-zero (an all-zero plan is the
+        fault-free pipeline; no carry state or RNG is threaded)."""
+        return any(float(getattr(self, n)) > 0.0 for n in _PROBS)
+
+    @property
+    def fault_slack(self) -> int:
+        """Extra rounds the toka3 timeout must absorb: a message can hide
+        in the delay queue for ``max_delay`` rounds, and a mattering drop
+        is only guaranteed healed ``resend_period`` rounds later."""
+        return int(self.max_delay) + int(self.resend_period)
+
+
+class FaultState(NamedTuple):
+    """Per-shard in-carry fault state.
+
+    ``queue[d, k, m]`` holds a withheld message value for query ``k`` at
+    flat payload position ``m``, due for release in ``d + 1`` rounds
+    (+inf = empty). ``unhealed[k]`` latches a dropped message that would
+    have improved the receiver, until the next anti-entropy resend."""
+    queue: Any      # [D, K, M] f32 (sim stacks a leading [P])
+    unhealed: Any   # [K] bool
+
+
+def init_state(plan: FaultPlan, nq: int, n_msgs: int,
+               n_parts: int | None = None) -> FaultState:
+    """Empty fault state; ``n_parts`` prepends the stacked sim axis."""
+    lead = () if n_parts is None else (n_parts,)
+    return FaultState(
+        queue=jnp.full(lead + (plan.max_delay, nq, n_msgs), INF, jnp.float32),
+        unhealed=jnp.zeros(lead + (nq,), bool))
+
+
+def inject(plan: FaultPlan, incoming, d_target, state: FaultState, key):
+    """One round of receiver-side faults over flattened messages [K, M].
+
+    ``d_target[k, m]`` is the receiver's current distance at message m's
+    destination vertex (+inf for unaddressed positions) — it decides
+    whether a dropped message *mattered* and whether a released stale
+    message still counts as a real (improving) stale merge.
+
+    Returns ``(delivered [K, M], state', stale [K] i32, pending [K] bool)``
+    where ``delivered`` already min-merges this round's queue release.
+    """
+    kmode, kslot = jax.random.split(key)
+    u = jax.random.uniform(kmode, incoming.shape)
+    finite = jnp.isfinite(incoming)
+    p0 = plan.drop
+    p1 = p0 + plan.delay
+    p2 = p1 + plan.duplicate
+    p3 = p2 + plan.reorder
+    m_drop = finite & (u < p0)
+    m_delay = finite & (p0 <= u) & (u < p1)
+    m_dup = finite & (p1 <= u) & (u < p2)
+    m_reorder = finite & (p2 <= u) & (u < p3)
+
+    now = jnp.where(m_drop | m_delay | m_reorder, INF, incoming)
+
+    # release the oldest queue slot, age the rest, enqueue this round's
+    # delayed/duplicated/reordered values (delay draws a random slot;
+    # duplicate and reorder land at the head = next round)
+    D = state.queue.shape[0]
+    release = state.queue[0]
+    aged = jnp.concatenate(
+        [state.queue[1:], jnp.full_like(state.queue[:1], INF)])
+    slot = jnp.where(m_delay, jax.random.randint(kslot, incoming.shape, 0, D),
+                     0)
+    enq = m_delay | m_dup | m_reorder
+    onehot = (slot[None] == jnp.arange(D)[:, None, None]) & enq[None]
+    queue = jnp.minimum(aged, jnp.where(onehot, incoming[None], INF))
+
+    delivered = jnp.minimum(now, release)
+    stale = jnp.sum(jnp.isfinite(release) & (release < d_target),
+                    axis=-1).astype(jnp.int32)
+    # a lost message matters only while it would still improve the
+    # receiver — dist is monotone non-increasing, so once it stops
+    # mattering it never matters again
+    lost = m_drop & (incoming < d_target)
+    unhealed = state.unhealed | jnp.any(lost, axis=-1)
+    pending = jnp.any(jnp.isfinite(queue), axis=(0, -1))
+    if plan.resend_period > 0:
+        # anti-entropy will heal the drop: hold termination open for it.
+        # With no resend the drop is permanent — terminating is the only
+        # honest option, and the engine's certificate flags it degraded.
+        pending = pending | unhealed
+    return delivered, FaultState(queue=queue, unhealed=unhealed), stale, pending
+
+
+class FaultyExchange(NamedTuple):
+    """An ``ExchangeStage`` decorated with fault delivery: ``run`` is the
+    untouched transfer (duck-type compatible with the plain stage);
+    ``deliver`` is the per-shard injector the round applies to whatever
+    ``run`` produced, threading the in-carry :class:`FaultState`."""
+    name: str
+    dense: bool
+    run: Any
+    plan: FaultPlan
+    deliver: Any    # (shard, dist, incoming, state, key) -> (inc', st', stale, pending)
+
+
+def wrap_exchange(stage, plan: FaultPlan) -> FaultyExchange:
+    """Decorate a resolved exchange backend (bucket / pmin / a2a_dense)
+    with receiver-side fault injection under ``plan``.
+
+    The payload *kind* follows the stage's ``dense`` flag: dense incoming
+    is already owner-addressed ``[K, block]`` (``d_target`` is the local
+    distance row itself); bucketed incoming flattens ``[K, P, C]`` to
+    message positions whose targets come from the static ``recv_idx``
+    routing table."""
+
+    if stage.dense:
+        def deliver(sh, dist, incoming, state, key):
+            return inject(plan, incoming, dist, state, key)
+    else:
+        def deliver(sh, dist, incoming, state, key):
+            nq = incoming.shape[0]
+            flat = incoming.reshape(nq, -1)
+            tgt = sh.recv_idx.reshape(-1)   # sentinel = block -> fill +inf
+            d_t = jnp.take(dist, tgt, axis=1, mode="fill",
+                           fill_value=float("inf"))
+            out, st, stale, pending = inject(plan, flat, d_t, state, key)
+            return out.reshape(incoming.shape), st, stale, pending
+
+    return FaultyExchange(name=f"{stage.name}+faults", dense=stage.dense,
+                          run=stage.run, plan=plan, deliver=deliver)

@@ -179,6 +179,21 @@ def build_shards(g: Graph, n_parts: int, max_triangles_per_part: int | None = No
                  comm_layout: bool = True, send_sb: int = 128,
                  send_eb: int = 512, merge_vb: int = 128,
                  merge_eb: int = 512) -> SsspShards:
+    # input hardening: a NaN weight propagates through every min it
+    # touches, and a negative weight breaks the monotonicity the whole
+    # async pipeline (and its termination proofs) rests on — both would
+    # otherwise surface only as silently wrong fixpoints. Padding edges
+    # legitimately carry +inf, so only the graph's valid edges are checked.
+    w_all = np.asarray(g.weight)
+    v_all = np.asarray(g.valid)
+    bad_nan = v_all & np.isnan(w_all)
+    bad_inf = v_all & ~np.isnan(w_all) & ~np.isfinite(w_all)
+    bad_neg = v_all & (w_all < 0)
+    if bad_nan.any() or bad_inf.any() or bad_neg.any():
+        raise ValueError(
+            f"invalid edge weights: {int(bad_nan.sum())} NaN, "
+            f"{int(bad_inf.sum())} non-finite, {int(bad_neg.sum())} "
+            "negative — SSSP requires finite non-negative weights")
     pg = partition_1d(g, n_parts)
     P, block, n = pg.n_parts, pg.block, pg.n_vertices
 

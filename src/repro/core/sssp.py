@@ -70,6 +70,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.core import faults as faults_mod
 from repro.core import phases
 from repro.core import warmstart  # noqa: F401  (registers warm_init backends)
 from repro.core import toka as toka_mod
@@ -88,7 +89,7 @@ INF = jnp.float32(jnp.inf)
 @dataclasses.dataclass(frozen=True)
 class SsspConfig:
     exchange: str = "bucket"        # bucket | pmin | a2a_dense
-    toka: str = "toka0"             # toka0 | toka1 | toka2
+    toka: str = "toka0"             # toka0 | toka1 | toka2 | toka3
     local_solver: str = "bellman"   # bellman | delta | pallas
     send_backend: str = "xla"       # xla | pallas (cut-edge segment-min pack)
     merge_backend: str = "xla"      # xla | pallas (incoming scatter-min)
@@ -101,6 +102,8 @@ class SsspConfig:
     prune_offline_passes: int = 0   # vectorized Trishla before the solve
     tri_chunk: int = 256
     max_rounds: int = 100_000
+    faults: faults_mod.FaultPlan | None = None  # message failure model
+    toka3_safety: float = 2.0       # toka3 quiet-streak safety factor
 
     def __post_init__(self):
         # eager validation against the phase registry: a typo'd backend
@@ -111,6 +114,20 @@ class SsspConfig:
         phases.validate("send", self.send_backend)
         phases.validate("merge", self.merge_backend)
         phases.validate("warm_init", self.warm_start)
+        if self.faults is not None and not isinstance(self.faults,
+                                                      faults_mod.FaultPlan):
+            raise TypeError(f"cfg.faults must be a FaultPlan or None, got "
+                            f"{type(self.faults).__name__}")
+        if self.toka3_safety <= 0:
+            raise ValueError("toka3_safety must be > 0")
+
+    @property
+    def fault_plan(self) -> faults_mod.FaultPlan | None:
+        """The ACTIVE fault plan (an all-zero plan degenerates to None, so
+        the fault-free pipeline carries no fault state or RNG)."""
+        if self.faults is not None and self.faults.active:
+            return self.faults
+        return None
 
 
 class SsspStats(NamedTuple):
@@ -121,6 +138,9 @@ class SsspStats(NamedTuple):
     pruned_edges: jax.Array
     q_rounds: jax.Array = None        # [K] rounds each query was live
     q_relaxations: jax.Array = None   # [K] edge relaxations per query
+    q_converged: jax.Array = None     # [K] detector-done mask per query
+    stale_merges: jax.Array = None    # improving late (queued) deliveries
+    resends: jax.Array = None         # anti-entropy retransmissions
 
 
 class _Carry(NamedTuple):
@@ -137,6 +157,10 @@ class _Carry(NamedTuple):
     relaxations: Any  # [K]
     msgs_sent: Any    # [K]
     msgs_recv: Any    # [K]
+    faults: Any       # FaultState per shard, or None (fault-free)
+    streak: Any       # [K] consecutive globally-quiet rounds (toka3)
+    stale: Any        # [K] improving stale merges from the fault queue
+    resent: Any       # [K] anti-entropy retransmissions
 
 
 # --------------------------------------------------------------------------
@@ -401,13 +425,17 @@ def _quiescent(comm, new_active):
 
 # Per-query termination stages: every detector runs K independent instances
 # (toka2 circulates K tokens in the same ring hop). Uniform signature
-# returning ([K] done mask, toka2').
+# returning ([K] done mask, toka2', streak'). ``new_active`` here is the
+# TERMINATION view of the frontier: under fault injection the round ORs in
+# per-query ``pending`` bits (messages still in the delay queue, or drops
+# awaiting an anti-entropy resend), so no detector can declare quiescence
+# over in-flight state — the real frontier in the carry stays untouched.
 
 @phases.register("toka", "toka0")
 def _toka0_stage(cfg, comm, carry, new_active, sends, recvs, inter_edges,
                  n_parts, rank, vmapped: bool):
     quiescent, _ = _quiescent(comm, new_active)
-    return quiescent, carry.toka2
+    return quiescent, carry.toka2, carry.streak
 
 
 @phases.register("toka", "toka1")
@@ -416,7 +444,7 @@ def _toka1_stage(cfg, comm, carry, new_active, sends, recvs, inter_edges,
     quiescent, _ = _quiescent(comm, new_active)
     ie = inter_edges[:, None] if vmapped else inter_edges
     vote = toka_mod.toka1_vote(carry.msg_count + recvs, ie, n_parts)
-    return quiescent | comm.all_all(vote), carry.toka2
+    return quiescent | comm.all_all(vote), carry.toka2, carry.streak
 
 
 @phases.register("toka", "toka2")
@@ -429,8 +457,15 @@ def _toka2_stage(cfg, comm, carry, new_active, sends, recvs, inter_edges,
     # (counters zeroed; sound under BSP where nothing is in flight at
     # round boundaries). Found by the §Perf study: with counters, the
     # ring never observes a zero sum and toka2 spins to max_rounds.
+    # Fault injection breaks the invariant the same way (a dropped send
+    # is never received; a released duplicate is an unmatched receive),
+    # so an active FaultPlan also forces the color-only variant — the
+    # pending-aware idle bit already holds the ring open for in-flight
+    # messages.
     _, idle = _quiescent(comm, new_active)
-    if not phases.resolve("exchange", cfg.exchange).dense:
+    counters_ok = (not phases.resolve("exchange", cfg.exchange).dense
+                   and cfg.fault_plan is None)
+    if counters_ok:
         acct = _vcall(toka_mod.toka2_account, vmapped, carry.toka2,
                       sends, recvs)
     else:
@@ -444,7 +479,28 @@ def _toka2_stage(cfg, comm, carry, new_active, sends, recvs, inter_edges,
                           vmapped, acct, rank, idle, in_axes=(0, None, 0))
     incoming = comm.ring(outgoing)
     st = _vcall(toka_mod.toka2_absorb, vmapped, st, incoming)
-    return comm.all_all(st.seen_red), st
+    return comm.all_all(st.seen_red), st, carry.streak
+
+
+@phases.register("toka", "toka3")
+def _toka3_stage(cfg, comm, carry, new_active, sends, recvs, inter_edges,
+                 n_parts, rank, vmapped: bool):
+    # The paper's timeout heuristic: count consecutive rounds with NO
+    # global activity for a query (no frontier, no sends, no receives,
+    # nothing pending in a fault queue) and stop once the streak reaches
+    # the bound computed from inter-edge and partition counts
+    # (toka.toka3_bound; fault plans widen it by their slack). Activity is
+    # agreed by one all-reduce, so every shard advances the same streak
+    # and the vote needs no second collective.
+    slack = 0 if cfg.fault_plan is None else cfg.fault_plan.fault_slack
+    bound = toka_mod.toka3_bound(inter_edges, n_parts, cfg.toka3_safety,
+                                 slack)
+    act = jnp.any(new_active, axis=-1) | (sends > 0) | (recvs > 0)
+    busy = comm.all_any(act)
+    streak = jnp.where(busy, 0, carry.streak + 1)
+    if vmapped:
+        bound = bound[:, None]          # [P] inter_edges -> broadcast [P, K]
+    return streak >= bound, carry.toka2, streak
 
 
 # --------------------------------------------------------------------------
@@ -469,8 +525,13 @@ def build_pipeline(sh: SsspShards, cfg: SsspConfig) -> RoundPipeline:
     Pallas send/merge backends need the ``tx_*``/``mx_*`` layouts from
     ``build_shards``; when absent (``comm_layout=False``) they degrade to
     the XLA backends with a one-time warning, mirroring the pallas local
-    solver's ``relax_layout`` rule."""
+    solver's ``relax_layout`` rule. An active ``cfg.faults`` plan wraps
+    the resolved exchange stage with the fault-injecting decorator
+    (:func:`repro.core.faults.wrap_exchange`) — the transfer itself is
+    untouched; delivery goes through the injector."""
     ex = phases.resolve("exchange", cfg.exchange)
+    if cfg.fault_plan is not None:
+        ex = faults_mod.wrap_exchange(ex, cfg.fault_plan)
     send_backend = cfg.send_backend
     if send_backend == "pallas" and not sh.has_send_layout:
         phases.warn_once(
@@ -506,12 +567,16 @@ def _make_round(shard_or_stack: SsspShards, cfg: SsspConfig, comm, vmapped: bool
     (inside shard_map)."""
     sh = shard_or_stack
     pipe = build_pipeline(sh, cfg)
+    fp = cfg.fault_plan
 
     local_f, send_f, merge_f = pipe.local, pipe.send, pipe.merge
+    deliver_f = getattr(pipe.exchange, "deliver", None)
     if vmapped:
         local_f = jax.vmap(local_f)
         send_f = jax.vmap(send_f)
         merge_f = jax.vmap(merge_f)
+        if deliver_f is not None:
+            deliver_f = jax.vmap(deliver_f)
 
     def rounds_fn(carry: _Carry) -> _Carry:
         # converged-query mask: finished queries stop relaxing and sending
@@ -519,11 +584,66 @@ def _make_round(shard_or_stack: SsspShards, cfg: SsspConfig, comm, vmapped: bool
         act = carry.active & ~carry.done[..., None]
         dist, pruned, cursor, nrel, nprune = local_f(
             sh, carry.dist, act, carry.pruned, carry.tri_cursor)
-        payload, last_sent, sends = send_f(sh, dist, pruned, carry.last_sent)
+
+        # anti-entropy: every resend_period-th round, senders forget their
+        # last_sent floor for any query some receiver reported an unhealed
+        # mattering drop on (one all-reduce of the latches), so the send
+        # phase retransmits EVERY current slot minimum for it — slot
+        # values are monotone non-increasing, so the recomputed floor is
+        # correct and the dropped message is healed by this round's copy
+        # (unless dropped again; the receiver's latch re-arms and keeps
+        # termination open). Gating on the latch — rather than resending
+        # unconditionally — is what lets the system ever look quiet: a
+        # periodic blind burst would blacken toka2's ring and reset
+        # toka3's streak forever.
+        resend_now = None
+        last_in = carry.last_sent
+        if fp is not None and fp.resend_period > 0:
+            period = jnp.int32(fp.resend_period)
+            period_hit = (carry.rounds % period) == (period - 1)
+            need = comm.all_any(carry.faults.unhealed)   # [K] ([P, K] sim)
+            resend_now = period_hit & need
+            last_in = jnp.where(resend_now[..., None], INF, carry.last_sent)
+
+        payload, last_sent, sends = send_f(sh, dist, pruned, last_in)
         incoming = pipe.exchange.run(comm, payload)
+
+        fstate, stale, pending = carry.faults, None, None
+        if deliver_f is not None:
+            if resend_now is not None:
+                # this resend round retransmits everything: clear the
+                # unhealed latch BEFORE injection so only drops of the
+                # resent copies themselves re-arm it
+                fstate = fstate._replace(
+                    unhealed=jnp.where(resend_now, False, fstate.unhealed))
+            rkey = jax.random.fold_in(jax.random.PRNGKey(fp.seed),
+                                      carry.rounds)
+            rank = comm.rank()
+            if vmapped:
+                keys = jax.vmap(lambda r: jax.random.fold_in(rkey, r))(rank)
+            else:
+                keys = jax.random.fold_in(rkey, rank)
+            incoming, fstate, stale, pending = deliver_f(
+                sh, dist, incoming, fstate, keys)
+
         dist, new_active, recvs = merge_f(sh, dist, incoming)
-        done, toka2 = pipe.toka(cfg, comm, carry, new_active, sends, recvs,
-                                sh.inter_edges, n_parts, comm.rank(), vmapped)
+
+        # termination sees pending in-flight state as activity; the real
+        # frontier stays clean (a fake frontier bit would cause spurious
+        # relaxation work, not just a held-open detector)
+        toka_active = new_active
+        if pending is not None:
+            toka_active = new_active | pending[..., None]
+        done, toka2, streak = pipe.toka(
+            cfg, comm, carry, toka_active, sends, recvs, sh.inter_edges,
+            n_parts, comm.rank(), vmapped)
+
+        stale_c, resent_c = carry.stale, carry.resent
+        if stale is not None:
+            stale_c = stale_c + stale
+        if resend_now is not None:
+            resent_c = resent_c + jnp.where(resend_now, sends,
+                                            0).astype(jnp.int32)
         running = (~carry.done).astype(jnp.int32)
         return _Carry(
             dist=dist, active=new_active, pruned=pruned, tri_cursor=cursor,
@@ -532,7 +652,8 @@ def _make_round(shard_or_stack: SsspShards, cfg: SsspConfig, comm, vmapped: bool
             q_rounds=carry.q_rounds + running,
             relaxations=carry.relaxations + nrel.astype(jnp.int32),
             msgs_sent=carry.msgs_sent + sends.astype(jnp.int32),
-            msgs_recv=carry.msgs_recv + recvs.astype(jnp.int32))
+            msgs_recv=carry.msgs_recv + recvs.astype(jnp.int32),
+            faults=fstate, streak=streak, stale=stale_c, resent=resent_c)
 
     return rounds_fn
 
@@ -640,10 +761,97 @@ def _init_carry(sh: SsspShards, sources, cfg: SsspConfig, rank,
             pruned = off(sh.loc_w, sh.cut_w, sh.tri_uj, sh.tri_ui, sh.tri_ij,
                          sh.tri_valid)
 
+    fstate = None
+    fp = cfg.fault_plan
+    if fp is not None:
+        # one queue slot per flat payload position of the resolved
+        # exchange: block for the dense modes, P*C for the bucket routing
+        if phases.resolve("exchange", cfg.exchange).dense:
+            n_msgs = block
+        else:
+            n_msgs = n_parts * sh.recv_idx.shape[-1]
+        fstate = faults_mod.init_state(fp, nq, n_msgs,
+                                       n_parts if vmapped else None)
+
     return _Carry(dist=dist, active=active, pruned=pruned, tri_cursor=cursor,
                   last_sent=last_sent, msg_count=zeroq, toka2=toka2, done=done,
                   rounds=jnp.zeros((), jnp.int32), q_rounds=zeroq,
-                  relaxations=zeroq, msgs_sent=zeroq, msgs_recv=zeroq)
+                  relaxations=zeroq, msgs_sent=zeroq, msgs_recv=zeroq,
+                  faults=fstate, streak=zeroq, stale=zeroq, resent=zeroq)
+
+
+# --------------------------------------------------------------------------
+# fixpoint certificate
+# --------------------------------------------------------------------------
+#
+# "One extra relax round produces no improvement" — the exact convergence
+# test gating QueryResult.status in the engine. Distances computed by ANY
+# run of the monotone pipeline are upper bounds on the true fixpoint d*
+# (every finite value is a realized path length); if dist >= d* and
+# dist != d*, then some single edge relaxation improves some vertex. The
+# certificate therefore relaxes EVERY edge once — local and cut, ignoring
+# frontiers, last_sent floors, and even Trishla pruning (a pruned edge
+# can never be the sole witness, but including it costs nothing and keeps
+# the check independent of the pruning logic) — and reports, per query,
+# whether anything improved. No improvement <=> dist IS the fixpoint.
+
+def _cert_relax_shard(shard: SsspShards, dist):
+    """One unmasked relaxation of this shard's edges from ``dist`` [K, block].
+
+    Returns (new_local [K, block] after local-edge relaxation, dense cut
+    payload [K, P, block]); the caller min-combines the exchanged payloads
+    with the local result and compares against ``dist``."""
+    S = shard.slot_owner.shape[0]
+    d_src = jnp.take(dist, shard.loc_src, axis=1, mode="fill",
+                     fill_value=float("inf"))
+    new = jax.vmap(lambda d, c: d.at[shard.loc_dst].min(c, mode="drop"))(
+        dist, d_src + shard.loc_w)
+    d_cut = jnp.take(dist, shard.cut_src, axis=1, mode="fill",
+                     fill_value=float("inf"))
+    slot_val = jax.vmap(lambda c: jax.ops.segment_min(
+        c, shard.cut_seg, num_segments=S,
+        indices_are_sorted=True))(d_cut + shard.cut_w)
+    slot_val = jnp.where(shard.slot_valid, slot_val, INF)
+    return new, _scatter_dense(shard, slot_val, dist.shape[1])
+
+
+def certificate_improved_sim(sh: SsspShards, dist):
+    """Certificate over the stacked sim state: ``dist`` [P, K, block] ->
+    ``improved`` [K] bool (True = NOT at the fixpoint)."""
+    comm = SimComm(sh.n_parts)
+    new, payload = jax.vmap(_cert_relax_shard)(sh, dist)
+    merged = jnp.minimum(new, comm.exchange_pmin(payload))
+    return jnp.any(merged < dist, axis=(0, 2))
+
+
+def build_shmap_certificate(sh_spec: SsspShards, mesh, axis_names,
+                            on_trace=None):
+    """Jitted ``fn(shards_stacked, dist [P, K, block]) -> improved [K]``
+    running the certificate under shard_map (one pmin + one or-reduce on
+    the wire). ``on_trace`` mirrors the solver's compile accounting but
+    feeds the engine's SEPARATE certificate counter — tests pin
+    ``trace_counts`` to solver traces only."""
+    axes = tuple(axis_names)
+    comm = ShmapComm(axes)
+
+    def body(sh_local: SsspShards, dist_loc):
+        sh1 = jax.tree_util.tree_map(lambda x: x[0], sh_local)
+        d = dist_loc[0]
+        new, payload = _cert_relax_shard(sh1, d)
+        merged = jnp.minimum(new, comm.exchange_pmin(payload))
+        return or_reduce(jnp.any(merged < d, axis=-1), axes)
+
+    pspec = P(axes)
+    in_specs = (jax.tree_util.tree_map(lambda _: pspec, sh_spec), pspec)
+    shm = compat.shard_map(body, mesh=mesh, in_specs=in_specs,
+                           out_specs=P(), check_vma=False)
+
+    def run(stacked, dist):
+        if on_trace is not None:
+            on_trace(int(dist.shape[1]))
+        return shm(stacked, dist)
+
+    return jax.jit(run)
 
 
 # --------------------------------------------------------------------------
@@ -719,15 +927,17 @@ def build_shmap_solver_traced(sh_spec: SsspShards, cfg: SsspConfig, mesh,
             msgs_recv=comm.total(jnp.sum(carry.msgs_recv)),
             pruned_edges=comm.total(jnp.sum(carry.pruned).astype(jnp.int32)),
             q_rounds=carry.q_rounds,
-            q_relaxations=comm.total(carry.relaxations))
+            q_relaxations=comm.total(carry.relaxations),
+            q_converged=carry.done,
+            stale_merges=comm.total(jnp.sum(carry.stale)),
+            resends=comm.total(jnp.sum(carry.resent)))
         return carry.dist[None], stats  # restore leading P dim
 
     pspec = P(axes)
     rspec = P()
     in_specs = jax.tree_util.tree_map(lambda _: pspec, sh_spec)
     in_specs = (in_specs, rspec, rspec) + ((pspec,) if warm else ())
-    out_specs = (pspec, SsspStats(rspec, rspec, rspec, rspec, rspec,
-                                  rspec, rspec))
+    out_specs = (pspec, SsspStats(*([rspec] * 10)))
     shm = compat.shard_map(body, mesh=mesh, in_specs=in_specs,
                            out_specs=out_specs, check_vma=False)
 

@@ -1,6 +1,6 @@
 """ToKa — termination detection for the asynchronous SSSP (paper §III.D).
 
-Three detectors:
+Four detectors:
 
 - ``toka0`` (BSP baseline, not in the paper): global quiescence via one
   all-reduce of "any shard still has work". Under a lock-step runtime this
@@ -16,6 +16,16 @@ Three detectors:
   per round over the device ring (``collective-permute`` on ICI); a full
   white, zero-count circuit triggers a red token which every shard must
   observe before the outer loop exits.
+
+- ``toka3`` (the paper's timeout heuristic): terminate after the system
+  has been globally inactive — no sends, no receives, no live frontier,
+  nothing in flight — for ``T`` consecutive rounds, where ``T`` is
+  computed from the inter-edge and partition counts with a safety factor
+  (:func:`toka3_bound`). Unlike toka1 it never fires while traffic flows,
+  and unlike toka2 it needs no token state — only a per-query streak
+  counter. Under a :class:`~repro.core.faults.FaultPlan` the bound gains
+  ``fault_slack`` rounds so messages hiding in the delay queue or awaiting
+  an anti-entropy resend cannot look like quiescence.
 
 Color convention (paper text): a shard turns BLACK when it *sends* distance
 updates and decrements its counter per message sent; it increments the
@@ -139,3 +149,28 @@ def toka1_vote(msg_count, inter_edges, n_parts: int):
     """Paper Algorithm 4: stop when msg_count >= n_parts * inter_edges."""
     bound = jnp.int32(n_parts) * jnp.maximum(inter_edges.astype(jnp.int32), 1)
     return msg_count >= bound
+
+
+def toka3_bound(inter_edges, n_parts, safety, fault_slack: int = 0):
+    """Quiet-streak timeout (rounds): ``ceil(safety * (1 + log2(1 + P) +
+    log2(1 + inter_edges / P))) + fault_slack``.
+
+    The log terms scale the grace period with how long a wavefront can
+    plausibly stay silent: token/aggregation latency grows with the
+    partition ring (``log2 P``) and revival latency with how much cut
+    structure a stray update can reawaken (``log2`` of per-part inter
+    edges). ``safety`` is the paper's safety factor; ``fault_slack``
+    covers bounded delivery delay + anti-entropy period under fault
+    injection. Works on traced or concrete inputs — the shard_map body
+    calls it on a traced ``inter_edges``."""
+    Pf = jnp.float32(n_parts)
+    ie = jnp.asarray(inter_edges).astype(jnp.float32)
+    t = jnp.ceil(safety * (1.0 + jnp.log2(1.0 + Pf) + jnp.log2(1.0 + ie / Pf)))
+    return t.astype(jnp.int32) + jnp.int32(fault_slack)
+
+
+def toka3_timeout(inter_edges_total: int, n_parts: int, safety: float = 2.0,
+                  fault_slack: int = 0) -> int:
+    """Host-side toka3 bound (same formula as :func:`toka3_bound`), for
+    tests and tooling that want the concrete round budget."""
+    return int(toka3_bound(inter_edges_total, n_parts, safety, fault_slack))

@@ -22,7 +22,7 @@ import time
 
 import numpy as np
 
-from repro.core import SsspConfig, SsspEngine, build_shards
+from repro.core import FaultPlan, SsspConfig, SsspEngine, build_shards
 from repro.graph import (dijkstra_reference, rmat_graph, road_grid_graph,
                          random_graph)
 
@@ -46,7 +46,7 @@ def main():
     p.add_argument("--exchange", default="bucket",
                    choices=["bucket", "pmin", "a2a_dense"])
     p.add_argument("--toka", default="toka0",
-                   choices=["toka0", "toka1", "toka2"])
+                   choices=["toka0", "toka1", "toka2", "toka3"])
     p.add_argument("--solver", default="bellman",
                    choices=["bellman", "delta", "pallas"])
     p.add_argument("--send-backend", default="xla", choices=["xla", "pallas"],
@@ -69,10 +69,31 @@ def main():
     p.add_argument("--result-cache", type=int, default=0,
                    help="LRU size for exact-repeat query results "
                         "(0 disables; hits are served with zero rounds)")
+    p.add_argument("--fault-drop", type=float, default=0.0,
+                   help="message drop probability (fault injection)")
+    p.add_argument("--fault-delay", type=float, default=0.0,
+                   help="message delay probability (bounded in-carry queue)")
+    p.add_argument("--fault-duplicate", type=float, default=0.0,
+                   help="message duplication probability")
+    p.add_argument("--fault-reorder", type=float, default=0.0,
+                   help="message reorder probability (defer one round)")
+    p.add_argument("--fault-seed", type=int, default=0,
+                   help="seed of the deterministic fault stream")
+    p.add_argument("--resend-period", type=int, default=0,
+                   help="anti-entropy: retransmit last_sent minima every N "
+                        "rounds to heal dropped messages (0 = off; with "
+                        "drops and no resend, solves degrade)")
     p.add_argument("--validate", action="store_true")
     args = p.parse_args()
     if args.warm_start == "landmark" and args.landmarks < 1:
         p.error("--warm-start landmark requires --landmarks N (N >= 1)")
+    faults = None
+    if (args.fault_drop or args.fault_delay or args.fault_duplicate
+            or args.fault_reorder):
+        faults = FaultPlan(drop=args.fault_drop, delay=args.fault_delay,
+                           duplicate=args.fault_duplicate,
+                           reorder=args.fault_reorder, seed=args.fault_seed,
+                           resend_period=args.resend_period)
 
     if args.graph == "rmat":
         g = rmat_graph(scale=args.scale, edge_factor=args.edge_factor, seed=0)
@@ -106,7 +127,7 @@ def main():
                      send_backend=args.send_backend,
                      merge_backend=args.merge_backend,
                      warm_start=args.warm_start,
-                     prune_online=not args.no_prune)
+                     prune_online=not args.no_prune, faults=faults)
     if args.backend == "sim":
         engine = SsspEngine.build(sh, cfg, result_cache=args.result_cache)
     else:
@@ -138,6 +159,11 @@ def main():
           f"pruned={int(stats.pruned_edges)}  MTEPS={mteps:.1f} "
           f"queries/s={qps:.2f}"
           + (" [warm-started]" if res.warm_started else ""))
+    print(f"status: {res.status} "
+          f"(converged {int(res.q_converged.sum())}/{len(sources)} queries)")
+    if faults is not None:
+        print(f"faults: {faults}  stale_merges={int(stats.stale_merges)} "
+              f"resends={int(stats.resends)}")
     if args.result_cache:
         rerun = engine.solve(sources)
         print(f"repeat solve: {rerun.wall_s * 1e3:.2f}ms "
@@ -155,6 +181,15 @@ def main():
         print(f"reachable: {int(np.isfinite(dists[0]).sum())}/{g.n_vertices}")
 
     if args.validate:
+        # unconverged queries fail LOUDLY before the distance check even
+        # runs: an upper-bound row can happen to match Dijkstra on easy
+        # graphs, and "validated" must never describe a degraded solve
+        conv = res.q_converged
+        if res.status != "converged" or not conv.all():
+            bad = [sources[k] for k in np.flatnonzero(~conv)]
+            print(f"validation FAILED: status={res.status}, unconverged "
+                  f"sources={bad}")
+            raise SystemExit(1)
         ok = True
         for k, s in enumerate(sources):
             ref = dijkstra_reference(g, s)

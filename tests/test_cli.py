@@ -87,3 +87,27 @@ def test_result_cache_without_warm_start(capsys, monkeypatch):
     out = _run(capsys, monkeypatch, *TINY, "--sources", "1,8",
                "--result-cache", "4")
     assert "cache_hits=2/2" in out
+
+
+# ------------------------------------------------------------- faults ----
+
+def test_faulted_run_heals_and_validates(capsys, monkeypatch):
+    out = _run(capsys, monkeypatch, *TINY, "--sources", "0,5",
+               "--fault-drop", "0.2", "--resend-period", "4",
+               "--toka", "toka3", "--validate")
+    assert "status: converged (converged 2/2 queries)" in out
+    assert "resends=" in out
+    assert "validation vs Dijkstra (2 queries): OK" in out
+
+
+def test_validate_fails_loudly_on_degraded(capsys, monkeypatch):
+    # heavy drops, no resend: --validate must exit 1 BEFORE the Dijkstra
+    # check, naming the unconverged sources
+    monkeypatch.setattr(sys, "argv",
+                        ["sssp_run", *TINY, "--sources", "0,5",
+                         "--fault-drop", "0.6", "--fault-seed", "2",
+                         "--validate"])
+    with pytest.raises(SystemExit, match="1"):
+        sssp_run.main()
+    out = capsys.readouterr().out
+    assert "validation FAILED: status=degraded" in out

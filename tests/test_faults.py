@@ -1,0 +1,356 @@
+"""Fault injection, anti-entropy healing, toka3 timeout, and status.
+
+The robustness contract under test:
+  1. under every FaultPlan regime (drop/delay/duplicate/reorder), every
+     exchange mode converges BIT-IDENTICAL to the fault-free solve —
+     drops need `resend_period` anti-entropy, the other three are
+     absorbed by the monotone idempotent scatter-min merge alone
+  2. toka3 (the paper's timeout heuristic) terminates within its
+     computed bound and agrees with toka0/1/2 on distances, fault-free
+     and under faults
+  3. `QueryResult.status` distinguishes converged / max_rounds /
+     degraded via the fixpoint certificate, and non-converged results
+     never reach the result LRU or the landmark cache
+  4. `build_shards` rejects NaN / non-finite / negative edge weights
+
+CI runs this file once per injection regime (FAULT_MODE=drop|delay|
+duplicate|reorder restricts the matrix) and once unrestricted in tier1.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, strategies as st
+
+from repro.core import (FaultPlan, SsspConfig, SsspEngine, build_shards,
+                        solve_sim)
+from repro.core.toka import toka3_timeout
+from repro.graph import dijkstra_reference, random_graph
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+EXCHANGES = ("bucket", "pmin", "a2a_dense")
+
+# a plan per regime; drops are the only lossy regime, so only they need
+# the anti-entropy resend to reach the fault-free fixpoint
+_PLANS = {
+    "drop": lambda seed: FaultPlan(drop=0.3, seed=seed, resend_period=4),
+    "delay": lambda seed: FaultPlan(delay=0.4, seed=seed),
+    "duplicate": lambda seed: FaultPlan(duplicate=0.4, seed=seed),
+    "reorder": lambda seed: FaultPlan(reorder=0.4, seed=seed),
+}
+_MODES = tuple(m for m in _PLANS
+               if m == os.environ.get("FAULT_MODE", m))
+
+
+@pytest.fixture(scope="module")
+def graph_and_shards():
+    g = random_graph(n=96, m=360, seed=7)
+    return g, build_shards(g, 4, enumerate_triangles=False)
+
+
+@pytest.fixture(scope="module")
+def baselines(graph_and_shards):
+    """Fault-free solve per exchange mode (all bit-identical anyway)."""
+    _, sh = graph_and_shards
+    out = {}
+    for ex in EXCHANGES:
+        eng = SsspEngine.build(sh, SsspConfig(exchange=ex,
+                                              prune_online=False))
+        out[ex] = eng.solve([0, 5, 9])
+    return out
+
+
+# ------------------------------------------------ FaultPlan validation ----
+
+def test_fault_plan_validation():
+    for bad in (dict(drop=-0.1), dict(delay=1.5),
+                dict(drop=0.6, duplicate=0.6),   # sum > 1
+                dict(max_delay=0), dict(resend_period=-1)):
+        with pytest.raises(ValueError):
+            FaultPlan(**bad)
+    assert not FaultPlan().active
+    assert FaultPlan(drop=0.1).active
+    with pytest.raises(TypeError):
+        SsspConfig(faults={"drop": 0.1})
+    with pytest.raises(ValueError):
+        SsspConfig(toka3_safety=0.0)
+    # inactive plan is a no-op config-wise: no fault pipeline is built
+    assert SsspConfig(faults=FaultPlan()).fault_plan is None
+
+
+# ------------------------------------------- the fault matrix (CI grid) ----
+
+@pytest.mark.parametrize("exchange", EXCHANGES)
+@pytest.mark.parametrize("mode", _MODES)
+def test_fault_matrix_bit_identity(graph_and_shards, baselines, mode,
+                                   exchange):
+    """3 seeds x regime x exchange: faulted distances must be BIT-identical
+    to fault-free and certified converged. Only round counts may move."""
+    _, sh = graph_and_shards
+    base = baselines[exchange]
+    for seed in (0, 1, 2):
+        cfg = SsspConfig(exchange=exchange, prune_online=False,
+                         faults=_PLANS[mode](seed))
+        res = SsspEngine.build(sh, cfg).solve([0, 5, 9])
+        assert np.array_equal(res.dist, base.dist), (mode, exchange, seed)
+        assert res.status == "converged"
+        assert res.q_converged.all()
+
+
+@pytest.mark.parametrize("k", [1, 3])
+def test_stale_and_duplicates_never_corrupt(graph_and_shards, baselines, k):
+    """Combined delay+duplicate+reorder (no drops, no resend) still reaches
+    the exact fixpoint for K in {1, 3}: the merge is monotone and
+    idempotent, so late or repeated messages can only re-apply bounds."""
+    _, sh = graph_and_shards
+    plan = FaultPlan(delay=0.25, duplicate=0.2, reorder=0.15, seed=11)
+    for ex in EXCHANGES:
+        cfg = SsspConfig(exchange=ex, prune_online=False, faults=plan)
+        res = SsspEngine.build(sh, cfg).solve([0, 5, 9][:k])
+        assert np.array_equal(res.dist, baselines[ex].dist[:k])
+        assert res.status == "converged"
+
+
+def test_fault_counters_surface_in_stats(graph_and_shards):
+    _, sh = graph_and_shards
+    res = SsspEngine.build(sh, SsspConfig(
+        prune_online=False,
+        faults=FaultPlan(drop=0.3, seed=1, resend_period=4))).solve([0, 5])
+    assert int(res.stats.resends) > 0
+    dres = SsspEngine.build(sh, SsspConfig(
+        prune_online=False,
+        faults=FaultPlan(delay=0.5, seed=1))).solve([0, 5])
+    assert int(dres.stats.stale_merges) > 0
+
+
+# ------------------------------------------------------ toka3 timeout ----
+
+def test_toka3_matches_other_detectors(graph_and_shards, baselines):
+    """toka3 must agree with toka0/1/2 on distances (round counts differ:
+    the timeout pays its bound in extra quiet rounds)."""
+    _, sh = graph_and_shards
+    base = baselines["bucket"]
+    rounds = {}
+    for toka in ("toka0", "toka1", "toka2", "toka3"):
+        res = SsspEngine.build(sh, SsspConfig(
+            toka=toka, prune_online=False)).solve([0, 5, 9])
+        assert np.array_equal(res.dist, base.dist), toka
+        assert res.status == "converged"
+        rounds[toka] = int(res.stats.rounds)
+    assert rounds["toka3"] >= rounds["toka0"]
+
+
+def test_toka3_matches_under_faults(graph_and_shards, baselines):
+    plan = FaultPlan(drop=0.2, delay=0.1, duplicate=0.1, seed=3,
+                     resend_period=4)
+    _, sh = graph_and_shards
+    base = baselines["bucket"]
+    for toka in ("toka0", "toka1", "toka2", "toka3"):
+        res = SsspEngine.build(sh, SsspConfig(
+            toka=toka, prune_online=False, faults=plan)).solve([0, 5, 9])
+        assert np.array_equal(res.dist, base.dist), toka
+        assert res.status == "converged", toka
+
+
+def test_toka3_terminates_within_bound(graph_and_shards):
+    """rounds(toka3) <= rounds(toka0) + computed timeout: the streak can
+    only start after real quiescence, and then fires exactly at the bound."""
+    _, sh = graph_and_shards
+    r0 = int(SsspEngine.build(sh, SsspConfig(
+        toka="toka0", prune_online=False)).solve([0, 5, 9]).stats.rounds)
+    r3 = int(SsspEngine.build(sh, SsspConfig(
+        toka="toka3", prune_online=False)).solve([0, 5, 9]).stats.rounds)
+    ie_total = int(np.asarray(sh.inter_edges).sum())
+    bound = toka3_timeout(ie_total, sh.n_parts, safety=2.0)
+    assert r3 <= r0 + bound + 1
+
+
+def test_toka3_safety_scales_the_bound():
+    assert toka3_timeout(1000, 8, safety=4.0) >= toka3_timeout(1000, 8,
+                                                               safety=2.0)
+    assert toka3_timeout(1000, 8, fault_slack=7) == \
+        toka3_timeout(1000, 8) + 7
+
+
+# ------------------------------------------------ graceful degradation ----
+
+def test_unhealed_drops_degrade_loudly(graph_and_shards, baselines):
+    """Heavy drops with NO resend: the detectors see quiet and fire, but
+    the certificate catches the un-relaxed edges -> status='degraded',
+    q_converged all-False, distances strictly above the true fixpoint."""
+    _, sh = graph_and_shards
+    res = SsspEngine.build(sh, SsspConfig(
+        prune_online=False,
+        faults=FaultPlan(drop=0.6, seed=2))).solve([0, 5, 9])
+    assert res.status == "degraded"
+    assert not res.q_converged.any()
+    base = baselines["bucket"]
+    assert not np.array_equal(res.dist, base.dist)
+    assert np.all(np.asarray(res.dist) >= np.asarray(base.dist) - 1e-6)
+
+
+def test_max_rounds_status(graph_and_shards):
+    _, sh = graph_and_shards
+    res = SsspEngine.build(sh, SsspConfig(
+        prune_online=False, max_rounds=2)).solve([0, 5, 9])
+    assert res.status == "max_rounds"
+    assert not res.q_converged.all()
+
+
+def test_degraded_results_never_cached(graph_and_shards):
+    _, sh = graph_and_shards
+    eng = SsspEngine.build(sh, SsspConfig(
+        prune_online=False, faults=FaultPlan(drop=0.6, seed=2)),
+        result_cache=16)
+    first = eng.solve([0, 5])
+    assert first.status == "degraded"
+    again = eng.solve([0, 5])
+    assert again.cache_hits == 0          # degraded rows were not admitted
+    assert int(again.stats.rounds) > 0    # it really re-solved
+
+
+def test_degraded_landmarks_rejected(graph_and_shards):
+    _, sh = graph_and_shards
+    eng = SsspEngine.build(sh, SsspConfig(
+        prune_online=False, faults=FaultPlan(drop=0.6, seed=2)))
+    with pytest.raises(ValueError, match="did not converge"):
+        eng.precompute_landmarks([0, 5])
+
+
+def test_certify_false_falls_back_to_detector(graph_and_shards):
+    _, sh = graph_and_shards
+    res = SsspEngine.build(sh, SsspConfig(prune_online=False),
+                           certify=False).solve([0, 5])
+    assert res.status == "converged" and res.q_converged.all()
+
+
+def test_certificate_traces_do_not_pollute_trace_counts(graph_and_shards):
+    _, sh = graph_and_shards
+    eng = SsspEngine.build(sh, SsspConfig(prune_online=False))
+    eng.solve([0, 5])
+    eng.solve([9, 3])
+    assert eng.trace_counts == {2: 1}     # the engine contract, unchanged
+    assert eng.cert_traces == 1           # certificate compiled separately
+
+
+# ------------------------------------------------------ input hardening ----
+
+def _with_weight(g, i, value):
+    w = np.asarray(g.weight).copy()
+    w[i] = value
+    return dataclasses.replace(g, weight=jnp.asarray(w))
+
+
+@pytest.mark.parametrize("value,label", [(np.nan, "NaN"), (-1.0, "negative"),
+                                         (np.inf, "non-finite")])
+def test_build_shards_rejects_bad_weights(value, label):
+    g = random_graph(n=40, m=80, seed=0)
+    with pytest.raises(ValueError, match=label):
+        build_shards(_with_weight(g, 3, value), 4,
+                     enumerate_triangles=False)
+
+
+def test_build_shards_ignores_padding_weights():
+    # padding edges legitimately carry +inf; only valid edges are checked
+    from repro.graph.structure import csr_from_coo, graph_to_numpy
+    g = random_graph(n=40, m=80, seed=0)
+    src, dst, w = graph_to_numpy(g)
+    padded = csr_from_coo(src, dst, w, g.n_vertices,
+                          e_pad=g.n_edges + 13)
+    assert padded.e_pad > padded.n_edges
+    assert np.isinf(np.asarray(padded.weight)[-1])
+    build_shards(padded, 4, enumerate_triangles=False)
+
+
+# ------------------------------------------- merge properties (oracle) ----
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_scatter_min_merge_properties(seed):
+    """The merge primitive itself: idempotent, commutative,
+    permutation-invariant — the algebra the whole fault tolerance story
+    rests on."""
+    rng = np.random.default_rng(seed)
+    n, m = 32, 48
+    d = jnp.asarray(rng.uniform(0, 50, n).astype(np.float32))
+    idx = rng.integers(0, n, size=m)
+    a = jnp.asarray(rng.uniform(0, 50, m).astype(np.float32))
+    b = jnp.asarray(rng.uniform(0, 50, m).astype(np.float32))
+    once = d.at[idx].min(a)
+    assert np.array_equal(once, once.at[idx].min(a))          # idempotent
+    p = rng.permutation(m)
+    assert np.array_equal(once, d.at[idx[p]].min(a[p]))       # perm-inv
+    ab = d.at[idx].min(a).at[idx].min(b)
+    ba = d.at[idx].min(b).at[idx].min(a)
+    assert np.array_equal(ab, ba)                             # commutative
+    # stale re-delivery (an older, larger bound) never changes the result
+    stale = jnp.asarray(np.asarray(a) + 5.0)
+    assert np.array_equal(once, once.at[idx].min(stale))
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_faulted_solve_matches_dijkstra(seed):
+    """End to end vs the Dijkstra oracle, not just vs the fault-free
+    solver: random graph, combined plan, distances exact."""
+    g = random_graph(n=64, m=220, seed=seed)
+    sh = build_shards(g, 3, enumerate_triangles=False)
+    plan = FaultPlan(drop=0.2, delay=0.2, duplicate=0.1, seed=seed,
+                     resend_period=3)
+    dist, _ = solve_sim(sh, 0, SsspConfig(prune_online=False, faults=plan))
+    np.testing.assert_allclose(dist, dijkstra_reference(g, 0),
+                               rtol=1e-5, atol=1e-4)
+
+
+# --------------------------------------------------------- shmap parity ----
+
+_SHMAP_FAULTS_PROG = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import numpy as np
+    from repro import compat
+    from repro.core import (FaultPlan, SsspConfig, SsspEngine, build_shards)
+    from repro.graph import random_graph
+
+    g = random_graph(n=96, m=360, seed=7)
+    sh = build_shards(g, 4, enumerate_triangles=False)
+    base = SsspEngine.build(sh, SsspConfig(prune_online=False)).solve([0, 5])
+
+    mesh = compat.make_mesh((4,), ("d",))
+    cfg = SsspConfig(prune_online=False, toka="toka3",
+                     faults=FaultPlan(drop=0.2, seed=1, resend_period=4))
+    eng = SsspEngine.build(sh, cfg, backend="shmap", mesh=mesh,
+                           axis_names=("d",))
+    res = eng.solve([0, 5])
+    assert res.status == "converged", res.status
+    assert res.q_converged.all()
+    assert np.array_equal(res.dist, base.dist)
+    assert int(res.stats.resends) > 0
+
+    # degraded detection works across devices too
+    deng = SsspEngine.build(sh, SsspConfig(
+        prune_online=False, faults=FaultPlan(drop=0.6, seed=2)),
+        backend="shmap", mesh=mesh, axis_names=("d",))
+    dres = deng.solve([0, 5])
+    assert dres.status == "degraded", dres.status
+    print("SHMAP FAULTS OK")
+""")
+
+
+def test_shmap_faulted_solve_matches_sim():
+    """shmap under faults: bit-identical to the fault-free sim solve,
+    certificate-backed status on the multi-device path (subprocess:
+    device count must be set before jax initializes)."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SHMAP_FAULTS_PROG], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "SHMAP FAULTS OK" in out.stdout
