@@ -331,28 +331,77 @@ def _time_fn(fn, *args, repeats=5):
     return min(ts)
 
 
+def _pallas_grids(fn, *args):
+    """All pallas_call grids inside ``fn``'s jaxpr (recursing through
+    subjaxprs). The grid is the kernel's TILE-LOAD schedule: its product
+    is how many layout tiles one dispatch streams from HBM, which is the
+    cost that matters on a real accelerator (interpret-mode wall time on
+    CPU executes every vector lane and cannot see it)."""
+    found = []
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                found.append(tuple(eqn.params["grid_mapping"].grid))
+            for v in eqn.params.values():
+                if isinstance(v, jax.core.ClosedJaxpr):
+                    walk(v.jaxpr)
+                elif isinstance(v, jax.core.Jaxpr):
+                    walk(v)
+
+    walk(jax.make_jaxpr(fn)(*args).jaxpr)
+    return found
+
+
+def _grid_steps(grids):
+    return sum(int(np.prod(g)) for g in grids) if grids else 0
+
+
 def bench_phase_breakdown(out):
     """Per-phase wall time of one round (local / send / exchange / merge)
     on real mid-solve state, for both send/merge backend pairs and
     K in {1, 16} — so a kernel win (or regression) is attributable to the
-    phase that caused it, not smeared over the whole solve.
+    phase that caused it, not smeared over the whole solve — plus the
+    fused megakernel (``round='fused'``) against the best staged
+    data-plane total at each K.
 
     Methodology: run two full rounds from the initial carry to reach a
     state with live frontiers on every shard, then drive each phase of
     round three in isolation through ``sim_phase_fns`` (the same stage
     callables the round dispatches) with jitted, block_until_ready timing.
     Interpret-mode pallas times are NOT TPU perf (same caveat as the relax
-    kernel benchmarks) — the trajectory, not the absolute number, is the
-    tracked signal."""
+    kernel benchmarks): interpret mode executes every vector lane on CPU,
+    so a [K]-in-register kernel still pays K x the compute and wall time
+    cannot distinguish 'loads each tile once' from 'K x lanes of math'.
+    The accelerator cost model lives in the GRID instead, so each pallas
+    row records ``grid_steps`` (grid product: sequential kernel steps per
+    dispatch; for the send/merge/fused kernels, whose [K] axis is
+    in-register, this equals layout tiles streamed — the relax kernel
+    keeps q in-grid but innermost with q-invariant edge index maps, so
+    its edge tiles still load once per (vtile, chunk)). The regression
+    guards are HARD asserts on the grids: the 85 ms cliff this replaced
+    came from send/merge grids of ``(tiles, chunks, K)`` (tile loads x16
+    at K=16); the batched kernels must keep the grid K-INDEPENDENT
+    (identical at K=1 and K=16, i.e. well within the 2x bound the issue
+    set, vs the 16x of the cliff)."""
     g = BENCH_GRAPHS["graph1-like"]()
     rng = np.random.default_rng(11)
     sh = build_shards(g, 8, enumerate_triangles=False)
+    grids_by_k = {}
     for k in (1, 16):
         sources = sorted(int(s) for s in
                          rng.choice(g.n_vertices, size=k, replace=False))
+        staged = {}
+        staged_loads = {}
         for backend in ("xla", "pallas"):
+            # all-XLA vs all-pallas: the pallas column must include the
+            # relax kernel too, or its grid_steps undercount the staged
+            # round and the fused comparison is unfairly flattering
             cfg = SsspConfig(prune_online=False, send_backend=backend,
-                             merge_backend=backend)
+                             merge_backend=backend,
+                             local_solver="pallas" if backend == "pallas"
+                             else "bellman")
+            dpr = sssp_mod.dispatches_per_round(sh, cfg)
             round_fn = engine_for(sh, cfg).round_fn
             carry = sssp_mod._init_carry(sh, sources, cfg, rank=None,
                                          vmapped=True)
@@ -363,18 +412,62 @@ def bench_phase_breakdown(out):
                                 carry.tri_cursor)[0]
             payload = fns["send"](dist, carry.pruned, carry.last_sent)[0]
             incoming = fns["exchange"](payload)
-            times = {
-                "local": _time_fn(fns["local"], carry.dist, act,
-                                  carry.pruned, carry.tri_cursor),
-                "send": _time_fn(fns["send"], dist, carry.pruned,
-                                 carry.last_sent),
-                "exchange": _time_fn(fns["exchange"], payload),
-                "merge": _time_fn(fns["merge"], dist, incoming),
+            phase_args = {
+                "local": (fns["local"], carry.dist, act, carry.pruned,
+                          carry.tri_cursor),
+                "send": (fns["send"], dist, carry.pruned, carry.last_sent),
+                "exchange": (fns["exchange"], payload),
+                "merge": (fns["merge"], dist, incoming),
             }
+            times = {ph: _time_fn(*fa) for ph, fa in phase_args.items()}
+            grids = {ph: _pallas_grids(*fa) for ph, fa in phase_args.items()}
+            staged[backend] = times
+            staged_loads[backend] = sum(_grid_steps(gs)
+                                        for gs in grids.values())
             total = sum(times.values())
             for phase, t in times.items():
                 out(f"phase[{phase}][K={k}][{backend}]", t * 1e6,
-                    f"share={t / total:.2f}")
+                    f"share={t / total:.2f} dispatches_per_round={dpr} "
+                    f"grid_steps={_grid_steps(grids[phase])}")
+            if backend == "pallas":
+                grids_by_k.setdefault(k, {}).update(
+                    {ph: grids[ph] for ph in ("send", "merge")})
+        # fused megakernel: ONE dispatch replaces local+send+merge; its
+        # fair staged comparison is the best data-plane total (same work,
+        # exchange excluded from both sides). Wall time in interpret mode
+        # still pays K x lanes + per-grid-step Python overhead; the fusion
+        # win is the dispatch count (2 vs 4) and the single shared tile
+        # stream, both recorded in the derived fields.
+        fcfg = SsspConfig(prune_online=False, round="fused")
+        fdpr = sssp_mod.dispatches_per_round(sh, fcfg)
+        fround = engine_for(sh, fcfg).round_fn
+        fcarry = fround(fround(sssp_mod._init_carry(sh, sources, fcfg,
+                                                    rank=None, vmapped=True)))
+        ffns = sim_phase_fns(sh, fcfg)
+        live = ~fcarry.done
+        front_in = fcarry.active & live[..., None]
+        fargs = (ffns["fused"], fcarry.dist, front_in, live, fcarry.incoming,
+                 fcarry.last_sent, fcarry.pruned)
+        t_fused = _time_fn(*fargs)
+        fgrids = _pallas_grids(*fargs)
+        grids_by_k[k]["fused"] = fgrids
+        best_staged = min(
+            sum(t for ph, t in times.items() if ph != "exchange")
+            for times in staged.values())
+        out(f"phase[fused][K={k}]", t_fused * 1e6,
+            f"best_staged_round={best_staged * 1e6:.0f}us "
+            f"dispatches_per_round={fdpr} grid_steps={_grid_steps(fgrids)} "
+            f"staged_pallas_grid_steps={staged_loads['pallas']} "
+            f"wall_speedup={best_staged / t_fused:.2f}")
+    # HARD regression guards (the 85 ms cliff): every pallas grid in the
+    # batched send/merge kernels and the fused megakernel must be
+    # K-independent — identical schedules at K=1 and K=16
+    for phase in ("send", "merge", "fused"):
+        g1, g16 = grids_by_k[1][phase], grids_by_k[16][phase]
+        assert g1 == g16, (
+            f"pallas {phase} grid scales with K ({g1} at K=1 vs {g16} at "
+            f"K=16) — per-query tile re-streaming is back")
+        assert g1, f"pallas {phase} traced no pallas_call (fallback?)"
 
 
 def run_all(out):
@@ -403,10 +496,12 @@ SMOKE_GRAPHS = {
 
 
 def run_smoke(out):
-    """CI-sized subset: the engine-serving and warm-start sections on tiny
-    graphs. Both sections carry hard asserts (recompiles == 0 on warm
-    paths, warm bit-identity, zero-round cache hits), so the smoke job is
-    a correctness gate as well as an artifact producer."""
+    """CI-sized subset: the engine-serving, warm-start, faults, and
+    phase-breakdown sections on tiny graphs. These sections carry hard
+    asserts (recompiles == 0 on warm paths, warm bit-identity, zero-round
+    cache hits, faulted bit-identity, pallas send/merge within 2x of XLA
+    at K=16), so the smoke job is a correctness gate as well as an
+    artifact producer."""
     global BENCH_GRAPHS
     full = BENCH_GRAPHS
     BENCH_GRAPHS = SMOKE_GRAPHS
@@ -418,6 +513,7 @@ def run_smoke(out):
         bench_engine_serving(smoke_out)
         bench_warm_start(smoke_out)
         bench_faults(smoke_out)
+        bench_phase_breakdown(smoke_out)
     finally:
         BENCH_GRAPHS = full
 

@@ -17,7 +17,10 @@ Six steps are shown:
      bucketed batches; a submission is never split)
   4. the all-Pallas phase pipeline as a second session over the SAME
      shards — every phase (local relax, send pack, merge scatter)
-     dispatched to its TPU kernel backend, bit-identical to XLA
+     dispatched to its TPU kernel backend, bit-identical to XLA — then
+     the FUSED round (``round="fused"``): merge + relax fixpoint + send
+     pack as ONE megakernel, 2 dispatches per round instead of 4, still
+     bit-identical (``stats.n_dispatches`` shows the collapse)
   5. warm starts: ``precompute_landmarks`` + ``warm_start="landmark"``
      seeds every query with triangle-inequality upper bounds (repeated
      sources converge in ~1 round instead of re-propagating the wave),
@@ -116,6 +119,20 @@ def main():
           f"{identical}; rounds={int(kres.stats.rounds)}")
     assert identical
 
+    # fused round: the three data-plane phases share one dst-tiled tiling,
+    # so ``round="fused"`` composes them into a single ``pallas_call`` —
+    # the per-round dispatch count drops from 4 (local/send/exchange/merge)
+    # to 2 (megakernel + exchange), which is the round cost at µs-scale
+    # phases. Same messages, same rounds, same bits.
+    fused_eng = SsspEngine.build(shards, SsspConfig(round="fused",
+                                                    toka="toka2"))
+    fres = fused_eng.solve(sources)
+    assert np.array_equal(fres.dist, xres.dist)
+    print(f"fused megakernel round bit-identical: dispatches/solve "
+          f"{int(xres.stats.n_dispatches)} (staged) -> "
+          f"{int(fres.stats.n_dispatches)} (fused) over "
+          f"{int(fres.stats.rounds)} rounds")
+
     # 5. warm starts: solve a few landmark pivots ONCE, then serve. The
     #    warm_init stage seeds each query's distances with the
     #    triangle-inequality bound min_l(land[l, src] + land[l, v]) — an
@@ -156,18 +173,18 @@ def main():
     #    extra relax round) backs status="converged" with proof; with
     #    resend_period=0 the same drops would leave status="degraded" and
     #    the result barred from every cache.
-    fengine = SsspEngine.build(shards, SsspConfig(
+    finj = SsspEngine.build(shards, SsspConfig(
         local_solver="delta", delta=6.0, toka="toka3", prune_online=True,
         faults=FaultPlan(drop=0.2, seed=0, resend_period=4)))
-    fres = fengine.solve(sources)
-    assert np.array_equal(fres.dist, batch.dist)
-    assert fres.status == "converged"
-    print(f"20% message drop, healed: status={fres.status}, distances "
+    fr = finj.solve(sources)
+    assert np.array_equal(fr.dist, batch.dist)
+    assert fr.status == "converged"
+    print(f"20% message drop, healed: status={fr.status}, distances "
           f"bit-identical to the fault-free solve")
-    print(f"  rounds {int(batch.stats.rounds)} -> {int(fres.stats.rounds)}, "
-          f"stale_merges={int(fres.stats.stale_merges)}, "
-          f"resends={int(fres.stats.resends)} "
-          f"(+{int(fres.stats.msgs_sent) - int(batch.stats.msgs_sent)} msgs "
+    print(f"  rounds {int(batch.stats.rounds)} -> {int(fr.stats.rounds)}, "
+          f"stale_merges={int(fr.stats.stale_merges)}, "
+          f"resends={int(fr.stats.resends)} "
+          f"(+{int(fr.stats.msgs_sent) - int(batch.stats.msgs_sent)} msgs "
           f"healing overhead)")
 
 

@@ -57,7 +57,8 @@ from repro.core.sssp import (SimComm, SsspConfig, SsspStats, _as_sources,
                              _init_carry, _make_round,
                              build_shmap_certificate,
                              build_shmap_solver_traced,
-                             certificate_improved_sim)
+                             certificate_improved_sim, dispatches_per_round,
+                             make_finalize)
 from repro.core.warmstart import CachedRow, LandmarkCache, ResultCache
 
 
@@ -218,10 +219,15 @@ class SsspEngine:
 
             self.round_fn = jax.jit(counted_round)
             self._cert_fn = jax.jit(counted_cert)
+            # fused round: the loop exits with one delivered-but-unmerged
+            # message batch in carry.incoming (see sssp.make_finalize)
+            fin = make_finalize(shards, cfg, vmapped=True)
+            self._finalize_fn = jax.jit(fin) if fin is not None else None
             self.shmap_solver = None
         else:
             self.round_fn = None
             self._cert_fn = None
+            self._finalize_fn = None
             self.shmap_solver = build_shmap_solver_traced(
                 shards, cfg, mesh, self.axis_names, on_trace=self._note_trace)
 
@@ -340,9 +346,11 @@ class SsspEngine:
                 if bool(np.asarray(carry.done).all()):
                     break
             dist_pk = carry.dist
+            if self._finalize_fn is not None:
+                dist_pk = self._finalize_fn(carry.dist, carry.incoming)
             done_k = np.asarray(carry.done)[0][:k]  # globally agreed
             # [P, K, block] -> per-query global distance vectors
-            dist = np.moveaxis(np.asarray(carry.dist), 0, 1)
+            dist = np.moveaxis(np.asarray(dist_pk), 0, 1)
             dist = dist.reshape(kb, -1)[:k, : self.shards.n_vertices]
             stats = SsspStats(
                 rounds=carry.rounds,
@@ -354,7 +362,10 @@ class SsspEngine:
                 q_relaxations=np.sum(np.asarray(carry.relaxations),
                                      axis=0)[:k],
                 stale_merges=np.sum(np.asarray(carry.stale), dtype=np.int32),
-                resends=np.sum(np.asarray(carry.resent), dtype=np.int32))
+                resends=np.sum(np.asarray(carry.resent), dtype=np.int32),
+                n_dispatches=np.int32(
+                    int(np.asarray(carry.rounds))
+                    * dispatches_per_round(self.shards, self.cfg)))
         else:
             tc = time.perf_counter()
             if warm:
@@ -478,7 +489,7 @@ class SsspEngine:
                               msgs_recv=zero, pruned_edges=zero,
                               q_rounds=q_rounds, q_relaxations=q_relax,
                               q_converged=q_conv, stale_merges=zero,
-                              resends=zero)
+                              resends=zero, n_dispatches=zero)
             self.batches_served += 1
         # _solve_batch already counted the uncached subset it ran
         self.queries_served += k - len(uncached)

@@ -18,13 +18,22 @@ Registered phases and their config keys:
   ============== ======================= ===========================
   phase          config key              backends
   ============== ======================= ===========================
+  round          ``cfg.round``           staged | fused
   local_solver   ``cfg.local_solver``    bellman | delta | pallas
   send           ``cfg.send_backend``    xla | pallas
   exchange       ``cfg.exchange``        bucket | pmin | a2a_dense
   merge          ``cfg.merge_backend``   xla | pallas
-  toka           ``cfg.toka``            toka0 | toka1 | toka2
+  toka           ``cfg.toka``            toka0 | toka1 | toka2 | toka3
   warm_init      ``cfg.warm_start``      none | landmark
   ============== ======================= ===========================
+
+``round`` selects the SHAPE of the pipeline rather than one phase's
+implementation: ``staged`` dispatches local/send/exchange/merge as
+separate programs (4 data-plane dispatches per round); ``fused`` runs
+merge + local fixpoint + send pack as ONE Pallas megakernel
+(``kernels/round``), leaving 2 dispatches (megakernel + exchange) and
+making the ``local_solver``/``send_backend``/``merge_backend`` keys
+moot for the fused rounds.
 
 Implementations live next to the machinery they use (``local_solver.py``
 registers the local solvers, ``sssp.py`` the send/exchange/merge/toka

@@ -81,6 +81,7 @@ from repro.distributed.collectives import (
     all_to_all_tiled, and_reduce, flat_rank, or_reduce, ring_permute,
 )
 from repro.kernels.merge import merge_scatter_pallas
+from repro.kernels.round import fused_round_pallas, fused_round_rescue
 from repro.kernels.send import send_pack_pallas, send_payload_bucket
 
 INF = jnp.float32(jnp.inf)
@@ -93,6 +94,7 @@ class SsspConfig:
     local_solver: str = "bellman"   # bellman | delta | pallas
     send_backend: str = "xla"       # xla | pallas (cut-edge segment-min pack)
     merge_backend: str = "xla"      # xla | pallas (incoming scatter-min)
+    round: str = "staged"           # staged | fused (whole-round megakernel)
     warm_start: str = "none"        # none | landmark (engine-owned seed cache)
     delta: float = 4.0
     local_iters: int = 10_000
@@ -113,6 +115,7 @@ class SsspConfig:
         phases.validate("local_solver", self.local_solver)
         phases.validate("send", self.send_backend)
         phases.validate("merge", self.merge_backend)
+        phases.validate("round", self.round)
         phases.validate("warm_init", self.warm_start)
         if self.faults is not None and not isinstance(self.faults,
                                                       faults_mod.FaultPlan):
@@ -141,6 +144,7 @@ class SsspStats(NamedTuple):
     q_converged: jax.Array = None     # [K] detector-done mask per query
     stale_merges: jax.Array = None    # improving late (queued) deliveries
     resends: jax.Array = None         # anti-entropy retransmissions
+    n_dispatches: jax.Array = None    # data-plane dispatches (rounds x per-round)
 
 
 class _Carry(NamedTuple):
@@ -161,6 +165,8 @@ class _Carry(NamedTuple):
     streak: Any       # [K] consecutive globally-quiet rounds (toka3)
     stale: Any        # [K] improving stale merges from the fault queue
     resent: Any       # [K] anti-entropy retransmissions
+    incoming: Any = None   # fused round: delivered-but-unmerged messages
+    front_any: Any = None  # fused round: [K] "some frontier bit next round"
 
 
 # --------------------------------------------------------------------------
@@ -408,6 +414,36 @@ phases.register("exchange", "pmin")(ExchangeStage(
 phases.register("exchange", "a2a_dense")(ExchangeStage(
     "a2a_dense", dense=True, run=lambda comm, p: comm.exchange_a2a_dense(p)))
 
+# round pipeline shape: the staged local/send/merge phase chain, or the
+# whole-round Pallas megakernel (kernels/round) with one data-plane
+# dispatch per round besides the exchange
+phases.register("round", "staged")("staged")
+phases.register("round", "fused")("fused")
+
+
+def _round_mode(sh: SsspShards, cfg: SsspConfig) -> str:
+    """Resolved round pipeline. ``round='fused'`` needs ALL THREE tiled
+    layouts (relax ``rx_*``, send ``tx_*``, merge ``mx_*``); when any is
+    missing the fused backend degrades to the staged pipeline with a
+    one-time warning, mirroring the per-phase pallas fallbacks."""
+    if cfg.round != "fused":
+        return "staged"
+    if sh.has_relax_layout and sh.has_send_layout and sh.has_merge_layout:
+        return "fused"
+    phases.warn_once(
+        "round.fused.no_layout",
+        "round='fused' falling back to the staged pipeline: the shards are "
+        "missing the dst-/slot-/msg-tiled layouts (build_shards was called "
+        "with relax_layout=False or comm_layout=False)")
+    return "staged"
+
+
+def dispatches_per_round(sh: SsspShards, cfg: SsspConfig) -> int:
+    """Data-plane dispatches per round: the staged pipeline launches 4
+    (local solve, send pack, exchange collective, merge scatter); the
+    fused round launches 2 (megakernel + exchange collective)."""
+    return 2 if _round_mode(sh, cfg) == "fused" else 4
+
 
 def _vcall(fn, vmapped, *args, in_axes=0):
     """vmap ``fn`` over the query axis (always) and the shard axis (sim)."""
@@ -558,6 +594,236 @@ def build_pipeline(sh: SsspShards, cfg: SsspConfig) -> RoundPipeline:
         toka=phases.resolve("toka", cfg.toka))
 
 
+def _phase_fused(shard: SsspShards, dist, front_in, live, incoming, last_sent,
+                 pruned, *, dense: bool, cfg: SsspConfig):
+    """One megakernel dispatch: merge + local fixpoint + send pack
+    (``kernels/round``), plus the payload assembly.
+
+    Returns (new_dist, payload, last_sent', sends, nrel, resid) — a
+    non-empty ``resid`` row means ``cfg.pallas_sweeps`` in-kernel sweeps
+    did not reach the local fixpoint and the caller must rescue the round
+    with :func:`_phase_fused_rescue` before using the send outputs."""
+    e_loc = shard.loc_src.shape[0]
+    nq = dist.shape[0]
+    inc = incoming if dense else incoming.reshape(nq, -1)
+    new_dist, send_val, new_last, nrel, sends, resid = fused_round_pallas(
+        dist, front_in, live, inc, last_sent, shard.slot_valid,
+        shard.relax_layout, shard.send_layout, shard.merge_layout,
+        pruned[:e_loc], pruned[e_loc:], vb=shard.rx_vb, sb=shard.tx_sb,
+        n_sweeps=cfg.pallas_sweeps, dense=dense,
+        interpret=cfg.pallas_interpret)
+    if dense:
+        payload = _scatter_dense(shard, send_val, dist.shape[1])
+    else:
+        payload = send_payload_bucket(send_val, shard.tx_payload_slot)
+    return new_dist, payload, new_last, sends, nrel, resid
+
+
+def _phase_fused_rescue(shard: SsspShards, dist, resid, last_sent, pruned, *,
+                        dense: bool, cfg: SsspConfig):
+    """Finish a fused round whose in-kernel sweeps left a residual
+    frontier: continue the fixpoint with the batched relax kernel and
+    re-pack the sends against the ORIGINAL ``last_sent`` (the megakernel's
+    send outputs were computed from unconverged distances). Returns
+    (new_dist, payload, last_sent', sends, nrel_extra)."""
+    e_loc = shard.loc_src.shape[0]
+    new_dist, send_val, new_last, nrel_extra, sends = fused_round_rescue(
+        dist, resid, last_sent, shard.slot_valid, shard.relax_layout,
+        shard.send_layout, pruned[:e_loc], pruned[e_loc:], vb=shard.rx_vb,
+        sb=shard.tx_sb, n_sweeps=cfg.pallas_sweeps,
+        max_iters=cfg.local_iters, interpret=cfg.pallas_interpret)
+    if dense:
+        payload = _scatter_dense(shard, send_val, dist.shape[1])
+    else:
+        payload = send_payload_bucket(send_val, shard.tx_payload_slot)
+    return new_dist, payload, new_last, sends, nrel_extra
+
+
+def make_finalize(sh: SsspShards, cfg: SsspConfig, vmapped: bool):
+    """Exit-time merge for the fused round, or None for staged rounds.
+
+    The fused round rotates the phase chain — a round merges the PREVIOUS
+    round's delivered messages — so the loop can exit with one batch of
+    delivered-but-unmerged messages in ``carry.incoming``. Their receive /
+    activity accounting already happened when they were delivered; only
+    the value merge is outstanding, and it cannot change any converged
+    query's distances (termination required no improving message). The
+    merge still runs unconditionally: correctness of the final distances
+    must not depend on the detector's reasoning."""
+    if _round_mode(sh, cfg) != "fused":
+        return None
+    dense = phases.resolve("exchange", cfg.exchange).dense
+
+    def fin(shard, dist, incoming):
+        if dense:
+            return jnp.minimum(dist, incoming)
+        nq = dist.shape[0]
+        flat_val = incoming.reshape(nq, -1)
+        flat_idx = shard.recv_idx.reshape(-1)
+        return jax.vmap(
+            lambda d, v: d.at[flat_idx].min(v, mode="drop"))(dist, flat_val)
+
+    if vmapped:
+        return lambda dist, incoming: jax.vmap(fin)(sh, dist, incoming)
+    return lambda dist, incoming: fin(sh, dist, incoming)
+
+
+def _make_round_fused(sh: SsspShards, cfg: SsspConfig, comm, vmapped: bool,
+                      n_parts: int):
+    """The fused-round variant of :func:`_make_round`.
+
+    The phase chain is ROTATED relative to the staged round so the three
+    dst-tiled phases land in one dispatch: round r merges the messages
+    DELIVERED in round r-1 (held un-merged in ``carry.incoming``), chases
+    the resulting frontier to the local fixpoint, packs the sends, and
+    exchanges — all activity accounting (receives, frontier-any bits, the
+    termination view) happens at delivery time from ``new_dist`` and the
+    raw payload, so every per-round statistic and every detector sees
+    exactly the sequence the staged pipeline produces (bit-identity is
+    enforced by tests/test_fused_round.py). The idle branch (Trishla
+    pruning) runs BEFORE the kernel as its own ``lax.cond`` — merge and
+    send must still run on idle rounds, so only the prune work is gated."""
+    ex = phases.resolve("exchange", cfg.exchange)
+    fp = cfg.fault_plan
+    if fp is not None:
+        ex = faults_mod.wrap_exchange(ex, fp)
+    dense = ex.dense
+    toka_f = phases.resolve("toka", cfg.toka)
+    fused_f = partial(_phase_fused, dense=dense, cfg=cfg)
+    rescue_f = partial(_phase_fused_rescue, dense=dense, cfg=cfg)
+
+    def prune_f(shard, idle, pruned, cursor):
+        if not cfg.prune_online:
+            return pruned, cursor
+
+        def prune(p, c):
+            w_all = jnp.concatenate([shard.loc_w, shard.cut_w])
+            new_p, new_c, _n = trishla.prune_chunk(
+                w_all, p, c, shard.tri_uj, shard.tri_ui, shard.tri_ij,
+                shard.tri_valid, cfg.tri_chunk)
+            return new_p, new_c
+
+        return lax.cond(idle, prune, lambda p, c: (p, c), pruned, cursor)
+
+    def account_f(shard, dist, incoming):
+        """Receive counts + per-query any-improvement bits of a delivered
+        batch against the post-relax distances — the staged merge phase's
+        accounting, computed WITHOUT merging (the values merge next
+        round). Bucket: a message improves iff it beats the distance at
+        its routed target (sentinel rows gather -inf, never true)."""
+        if dense:
+            recvs = jnp.sum(incoming < dist, axis=-1).astype(jnp.int32)
+            any_imp = jnp.any(incoming < dist, axis=-1)
+        else:
+            nq = dist.shape[0]
+            flat = incoming.reshape(nq, -1)
+            idx = shard.recv_idx.reshape(-1)
+            recvs = jnp.sum(jnp.isfinite(flat), axis=-1).astype(jnp.int32)
+            d_t = jnp.take(dist, idx, axis=1, mode="fill",
+                           fill_value=-float("inf"))
+            any_imp = jnp.any(flat < d_t, axis=-1)
+        return any_imp, recvs
+
+    deliver_f = getattr(ex, "deliver", None)
+    prune_v, fused_v, rescue_v, account_v = (prune_f, fused_f, rescue_f,
+                                             account_f)
+    if vmapped:
+        prune_v = jax.vmap(prune_f)
+        fused_v = jax.vmap(fused_f)
+        rescue_v = jax.vmap(rescue_f)
+        account_v = jax.vmap(account_f)
+        if deliver_f is not None:
+            deliver_f = jax.vmap(deliver_f)
+
+    def rounds_fn(carry: _Carry) -> _Carry:
+        live = ~carry.done                             # [K] ([P, K] sim)
+        idle = ~jnp.any(carry.front_any & live, axis=-1)
+        pruned, cursor = prune_v(sh, idle, carry.pruned, carry.tri_cursor)
+        # injected frontier (warm-start seeds / source bits on round 0;
+        # zeroed by every fused round thereafter)
+        front_in = carry.active & live[..., None]
+
+        # anti-entropy resend window (same latch protocol as the staged
+        # round; see _make_round)
+        resend_now = None
+        last_in = carry.last_sent
+        if fp is not None and fp.resend_period > 0:
+            period = jnp.int32(fp.resend_period)
+            period_hit = (carry.rounds % period) == (period - 1)
+            need = comm.all_any(carry.faults.unhealed)
+            resend_now = period_hit & need
+            last_in = jnp.where(resend_now[..., None], INF, carry.last_sent)
+
+        dist, payload, last_sent, sends, nrel, resid = fused_v(
+            sh, carry.dist, front_in, live, carry.incoming, last_in, pruned)
+
+        # rescue: predicate reduced over the WHOLE shard stack, so the sim
+        # backend branches for real (an unbatched lax.cond) and the common
+        # all-converged round never pays for the continuation
+        def rescue(args):
+            d, pl_, ls, sd, nr, rs, li, pr = args
+            d2, pl2, ls2, sd2, extra = rescue_v(sh, d, rs, li, pr)
+            return d2, pl2, ls2, sd2, nr + extra
+
+        def keep(args):
+            d, pl_, ls, sd, nr, _rs, _li, _pr = args
+            return d, pl_, ls, sd, nr
+
+        dist, payload, last_sent, sends, nrel = lax.cond(
+            jnp.any(resid > 0), rescue, keep,
+            (dist, payload, last_sent, sends, nrel, resid, last_in, pruned))
+
+        incoming = ex.run(comm, payload)
+
+        fstate, stale, pending = carry.faults, None, None
+        if deliver_f is not None:
+            if resend_now is not None:
+                fstate = fstate._replace(
+                    unhealed=jnp.where(resend_now, False, fstate.unhealed))
+            rkey = jax.random.fold_in(jax.random.PRNGKey(fp.seed),
+                                      carry.rounds)
+            rank = comm.rank()
+            if vmapped:
+                keys = jax.vmap(lambda r: jax.random.fold_in(rkey, r))(rank)
+            else:
+                keys = jax.random.fold_in(rkey, rank)
+            incoming, fstate, stale, pending = deliver_f(
+                sh, dist, incoming, fstate, keys)
+
+        any_imp, recvs = account_v(sh, dist, incoming)
+
+        # the detectors only consume any(new_active, -1), so a synthetic
+        # [.., K, 1] mask carrying the any-improvement bit is equivalent
+        # to the staged merge's full frontier plane
+        toka_flag = any_imp
+        if pending is not None:
+            toka_flag = any_imp | pending
+        done, toka2, streak = toka_f(
+            cfg, comm, carry, toka_flag[..., None], sends, recvs,
+            sh.inter_edges, n_parts, comm.rank(), vmapped)
+
+        stale_c, resent_c = carry.stale, carry.resent
+        if stale is not None:
+            stale_c = stale_c + stale
+        if resend_now is not None:
+            resent_c = resent_c + jnp.where(resend_now, sends,
+                                            0).astype(jnp.int32)
+        running = (~carry.done).astype(jnp.int32)
+        return _Carry(
+            dist=dist, active=jnp.zeros_like(carry.active), pruned=pruned,
+            tri_cursor=cursor, last_sent=last_sent,
+            msg_count=carry.msg_count + recvs, toka2=toka2,
+            done=carry.done | done, rounds=carry.rounds + 1,
+            q_rounds=carry.q_rounds + running,
+            relaxations=carry.relaxations + nrel.astype(jnp.int32),
+            msgs_sent=carry.msgs_sent + sends.astype(jnp.int32),
+            msgs_recv=carry.msgs_recv + recvs.astype(jnp.int32),
+            faults=fstate, streak=streak, stale=stale_c, resent=resent_c,
+            incoming=incoming, front_any=any_imp)
+
+    return rounds_fn
+
+
 def _make_round(shard_or_stack: SsspShards, cfg: SsspConfig, comm, vmapped: bool,
                 n_parts: int):
     """Returns round(carry) -> carry, shared by both backends.
@@ -566,6 +832,8 @@ def _make_round(shard_or_stack: SsspShards, cfg: SsspConfig, comm, vmapped: bool
     ``vmapped=False``: phases run directly on a single shard's slice
     (inside shard_map)."""
     sh = shard_or_stack
+    if _round_mode(sh, cfg) == "fused":
+        return _make_round_fused(sh, cfg, comm, vmapped, n_parts)
     pipe = build_pipeline(sh, cfg)
     fp = cfg.fault_plan
 
@@ -666,7 +934,7 @@ def sim_phase_fns(sh: SsspShards, cfg: SsspConfig):
     (leading [P], then [K])."""
     comm = SimComm(sh.n_parts)
     pipe = build_pipeline(sh, cfg)
-    return {
+    fns = {
         "local": jax.jit(lambda dist, active, pruned, cursor:
                          jax.vmap(pipe.local)(sh, dist, active, pruned,
                                               cursor)),
@@ -676,6 +944,13 @@ def sim_phase_fns(sh: SsspShards, cfg: SsspConfig):
         "merge": jax.jit(lambda dist, incoming:
                          jax.vmap(pipe.merge)(sh, dist, incoming)),
     }
+    if sh.has_relax_layout and sh.has_send_layout and sh.has_merge_layout:
+        fused = partial(_phase_fused, dense=pipe.exchange.dense, cfg=cfg)
+        fns["fused"] = jax.jit(
+            lambda dist, front_in, live, incoming, last_sent, pruned:
+            jax.vmap(fused)(sh, dist, front_in, live, incoming, last_sent,
+                            pruned))
+    return fns
 
 
 def _toka2_init_batch(rank, nq: int):
@@ -773,11 +1048,27 @@ def _init_carry(sh: SsspShards, sources, cfg: SsspConfig, rank,
         fstate = faults_mod.init_state(fp, nq, n_msgs,
                                        n_parts if vmapped else None)
 
+    incoming = front_any = None
+    if _round_mode(sh, cfg) == "fused":
+        # the fused carry holds last round's delivered-but-unmerged
+        # messages; an all-INF batch makes round 0's merge the identity
+        # (base case of the bit-identity induction with the staged round)
+        C = sh.recv_idx.shape[-1]
+        dense = phases.resolve("exchange", cfg.exchange).dense
+        if vmapped:
+            shape = (n_parts, nq, block) if dense else (n_parts, nq,
+                                                        n_parts, C)
+        else:
+            shape = (nq, block) if dense else (nq, n_parts, C)
+        incoming = jnp.full(shape, INF, jnp.float32)
+        front_any = jnp.any(active, axis=-1)
+
     return _Carry(dist=dist, active=active, pruned=pruned, tri_cursor=cursor,
                   last_sent=last_sent, msg_count=zeroq, toka2=toka2, done=done,
                   rounds=jnp.zeros((), jnp.int32), q_rounds=zeroq,
                   relaxations=zeroq, msgs_sent=zeroq, msgs_recv=zeroq,
-                  faults=fstate, streak=zeroq, stale=zeroq, resent=zeroq)
+                  faults=fstate, streak=zeroq, stale=zeroq, resent=zeroq,
+                  incoming=incoming, front_any=front_any)
 
 
 # --------------------------------------------------------------------------
@@ -920,6 +1211,10 @@ def build_shmap_solver_traced(sh_spec: SsspShards, cfg: SsspConfig, mesh,
             return (~jnp.all(c.done)) & (c.rounds < cfg.max_rounds)
 
         carry = lax.while_loop(cond, round_fn, carry)
+        fin = make_finalize(sh1, cfg, vmapped=False)
+        dist_final = (carry.dist if fin is None
+                      else fin(carry.dist, carry.incoming))
+        dpr = jnp.int32(dispatches_per_round(sh1, cfg))
         stats = SsspStats(
             rounds=carry.rounds,
             relaxations=comm.total(jnp.sum(carry.relaxations)),
@@ -930,14 +1225,15 @@ def build_shmap_solver_traced(sh_spec: SsspShards, cfg: SsspConfig, mesh,
             q_relaxations=comm.total(carry.relaxations),
             q_converged=carry.done,
             stale_merges=comm.total(jnp.sum(carry.stale)),
-            resends=comm.total(jnp.sum(carry.resent)))
-        return carry.dist[None], stats  # restore leading P dim
+            resends=comm.total(jnp.sum(carry.resent)),
+            n_dispatches=carry.rounds * dpr)
+        return dist_final[None], stats  # restore leading P dim
 
     pspec = P(axes)
     rspec = P()
     in_specs = jax.tree_util.tree_map(lambda _: pspec, sh_spec)
     in_specs = (in_specs, rspec, rspec) + ((pspec,) if warm else ())
-    out_specs = (pspec, SsspStats(*([rspec] * 10)))
+    out_specs = (pspec, SsspStats(*([rspec] * 11)))
     shm = compat.shard_map(body, mesh=mesh, in_specs=in_specs,
                            out_specs=out_specs, check_vma=False)
 

@@ -15,18 +15,20 @@ row. Unlike the edge layouts there is no weight to carry the padding mask,
 so an explicit ``valid`` plane rides along (positions whose ``recv_idx``
 is the sentinel never enter the layout; padding is valid = 0).
 
-Grid ``(n_vtiles, n_chunks, K)`` with the query axis INNERMOST — the
-position chunk fetched for ``(tile, chunk)`` serves all K queries. All
-chunks of tile ``i`` for query ``q`` are complete at ``j == n_chunks - 1``,
-so the new-frontier plane (``new < dist``) is emitted in-kernel at tile
-finalization; receive counts accumulate in per-query SMEM counters.
+Grid ``(n_vtiles, n_chunks)`` — NO query axis. Each position chunk is
+fetched once and every query in the batch reduces against it in-register
+via ``tile_min_batch``, so layout tile loads per merge are ``n_tiles``
+rather than ``n_tiles × K``. All chunks of tile ``i`` are complete at
+``j == n_chunks - 1``, so the new-frontier plane (``new < dist``) is
+emitted in-kernel at tile finalization; receive counts accumulate in
+per-query SMEM counters.
 
 VMEM working set per step:
   dist / new rows            8 * K * block_pad
   frontier plane             4 * K * block_pad
   incoming rows              4 * K * P * C
   position chunk (pos, dstrel, valid)  ~12 * EB
-  one-hot tile               4 * EB * VB   (dominant)
+  one-hot expansion          4 * K * EB * VB   (dominant; batched reduce)
 """
 from __future__ import annotations
 
@@ -37,7 +39,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.tile_reduce import tile_min
+from repro.kernels.tile_reduce import tile_min_batch
 
 INF = float("inf")
 
@@ -45,14 +47,11 @@ INF = float("inf")
 def _merge_scatter_kernel(dist_ref, in_ref, pos_ref, dstrel_ref, valid_ref,
                           out_ref, front_ref, recv_ref, count_ref, *, vb: int,
                           n_vtiles: int, n_chunks: int, n_queries: int):
-    """Grid (vertex tile i, position chunk j, query q) — q innermost."""
+    """Grid (vertex tile i, position chunk j) — whole query batch per step."""
     i = pl.program_id(0)
     j = pl.program_id(1)
-    q = pl.program_id(2)
-    first = (i == 0) & (j == 0) & (q == 0)
-    last = ((i == n_vtiles - 1) & (j == n_chunks - 1)
-            & (q == n_queries - 1))
-    qrow = pl.dslice(q, 1)
+    first = (i == 0) & (j == 0)
+    last = (i == n_vtiles - 1) & (j == n_chunks - 1)
     tile = pl.dslice(i * vb, vb)
 
     @pl.when(first)
@@ -62,23 +61,25 @@ def _merge_scatter_kernel(dist_ref, in_ref, pos_ref, dstrel_ref, valid_ref,
 
     @pl.when(j == 0)
     def _init_tile():
-        out_ref[qrow, tile] = dist_ref[qrow, tile]
+        out_ref[:, tile] = dist_ref[:, tile]
 
     pos = pos_ref[0, 0, :]                    # [EB] int32 (padding = 0)
     dstrel = dstrel_ref[0, 0, :]              # [EB] int32 in [0, vb)
     valid = valid_ref[0, 0, :] > 0            # [EB]
-    v = jnp.take(in_ref[qrow, :][0], pos)
-    cand = jnp.where(valid, v, INF)
-    count_ref[q] = count_ref[q] + jnp.sum(valid & (v < INF)).astype(jnp.int32)
-    mins = tile_min(cand, dstrel, width=vb)
-    out_ref[qrow, tile] = jnp.minimum(out_ref[qrow, tile][0], mins)[None]
+    v = jnp.take(in_ref[...], pos, axis=1)    # [K, EB]
+    cand = jnp.where(valid[None, :], v, INF)
+    sums = jnp.sum(valid[None, :] & (v < INF), axis=1).astype(jnp.int32)
+    for k in range(n_queries):
+        count_ref[k] = count_ref[k] + sums[k]
+    mins = tile_min_batch(cand, dstrel, width=vb)     # [K, vb]
+    out_ref[:, tile] = jnp.minimum(out_ref[:, tile], mins)
 
-    # tile (i, q) complete: improved vertices form the next frontier
+    # tile i complete: improved vertices form the next frontier
     @pl.when(j == n_chunks - 1)
     def _finalize_tile():
-        front_ref[qrow, tile] = (
-            out_ref[qrow, tile][0] < dist_ref[qrow, tile][0]
-        ).astype(jnp.float32)[None]
+        front_ref[:, tile] = (
+            out_ref[:, tile] < dist_ref[:, tile]
+        ).astype(jnp.float32)
 
     @pl.when(last)
     def _fin():
@@ -97,10 +98,10 @@ def merge_scatter_tiled(dist_pad, incoming_flat, pos_t, dstrel_t, valid_t, *,
     nq, bp = dist_pad.shape
     assert eb_l == eb and bp == n_vtiles * vb
 
-    grid = (n_vtiles, n_chunks, nq)
-    dist_spec = pl.BlockSpec((nq, bp), lambda i, j, q: (0, 0))
-    in_spec = pl.BlockSpec(incoming_flat.shape, lambda i, j, q: (0, 0))
-    pos_spec = pl.BlockSpec((1, 1, eb), lambda i, j, q: (i, j, 0))
+    grid = (n_vtiles, n_chunks)
+    dist_spec = pl.BlockSpec((nq, bp), lambda i, j: (0, 0))
+    in_spec = pl.BlockSpec(incoming_flat.shape, lambda i, j: (0, 0))
+    pos_spec = pl.BlockSpec((1, 1, eb), lambda i, j: (i, j, 0))
     kernel = functools.partial(_merge_scatter_kernel, vb=vb,
                                n_vtiles=n_vtiles, n_chunks=n_chunks,
                                n_queries=nq)
@@ -111,7 +112,7 @@ def merge_scatter_tiled(dist_pad, incoming_flat, pos_t, dstrel_t, valid_t, *,
         out_specs=[
             dist_spec,                                     # merged distances
             dist_spec,                                     # new frontier
-            pl.BlockSpec((nq,), lambda i, j, q: (0,)),     # per-query recvs
+            pl.BlockSpec((nq,), lambda i, j: (0,)),        # per-query recvs
         ],
         out_shape=[
             jax.ShapeDtypeStruct((nq, bp), dist_pad.dtype),

@@ -1,0 +1,2 @@
+from repro.kernels.round.ops import fused_round_pallas, fused_round_rescue
+from repro.kernels.round.ref import fused_round_ref

@@ -1,0 +1,76 @@
+"""Pure-jnp oracle for one fused SP-Async round (interpret-mode testing).
+
+Replays the round as the staged pipeline would: scatter-min merge of the
+delivered messages, frontier derivation, Jacobi Bellman–Ford local
+fixpoint, then the segment-min send pack against ``last_sent``. The
+relaxation COUNT is sweep-schedule dependent (Jacobi here vs Gauss–Seidel
+in the kernel) and is deliberately not part of the oracle contract — the
+fixpoint itself is solver-independent, so distances and send outputs are
+bit-comparable. End-to-end count identity with the staged pallas pipeline
+is enforced by the solver-level tests instead.
+
+Self-contained (jnp only, no ``repro.core`` imports) so it can be used
+from kernel-layer tests without pulling in the solver.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INF = float("inf")
+
+
+def _local_fixpoint(dist, front, loc_src, loc_dst, loc_w, max_iters):
+    """Jacobi Bellman–Ford to fixpoint for one query row."""
+    def cond(c):
+        _, f, it = c
+        return jnp.any(f) & (it < max_iters)
+
+    def body(c):
+        d, f, it = c
+        ok = jnp.take(f, loc_src, mode="fill", fill_value=False)
+        d_src = jnp.take(d, loc_src, mode="fill", fill_value=INF)
+        cand = jnp.where(ok, d_src + loc_w, INF)
+        new = d.at[loc_dst].min(cand, mode="drop")
+        return new, new < d, it + 1
+
+    return jax.lax.while_loop(cond, body, (dist, front, jnp.int32(0)))[0]
+
+
+def fused_round_ref(dist, front_in, live, incoming, recv_idx, last_sent,
+                    slot_valid, loc_src, loc_dst, loc_w, pruned_loc, cut_src,
+                    cut_seg, cut_w, pruned_cut, *, dense: bool = False,
+                    max_iters: int = 10_000):
+    """dist/front_in: [K, block]; live: [K] bool; incoming: [K, M] flat
+    bucket messages (with ``recv_idx`` [M] flat targets, sentinel = block)
+    or [K, block] dense remote minima (recv_idx ignored); last_sent /
+    slot_valid: [K, S] / [S]; loc_* / cut_*: original-order edge lists;
+    pruned_*: bool masks. Returns (new_dist [K, block], send_val [K, S],
+    new_last [K, S], sends [K] i32)."""
+    nq, block = dist.shape
+    n_slots = last_sent.shape[1]
+
+    if dense:
+        merged = jnp.minimum(dist, incoming)
+    else:
+        flat = incoming.reshape(nq, -1)
+        idx = recv_idx.reshape(-1)
+        merged = jax.vmap(
+            lambda d, v: d.at[idx].min(v, mode="drop"))(dist, flat)
+    front = ((merged < dist) & live[:, None]) | front_in
+
+    w_loc = jnp.where(pruned_loc, INF, loc_w)
+    new_dist = jax.vmap(
+        lambda d, f: _local_fixpoint(d, f, loc_src, loc_dst, w_loc,
+                                     max_iters))(merged, front)
+
+    w_cut = jnp.where(pruned_cut, INF, cut_w)
+    d_src = jnp.take(new_dist, cut_src, axis=1, mode="fill", fill_value=INF)
+    cand = d_src + w_cut[None, :]
+    slot_val = jax.vmap(lambda c: jax.ops.segment_min(
+        c, cut_seg, num_segments=n_slots, indices_are_sorted=True))(cand)
+    improved = slot_valid[None, :] & (slot_val < last_sent)
+    send_val = jnp.where(improved, slot_val, INF)
+    new_last = jnp.where(improved, slot_val, last_sent)
+    sends = jnp.sum(improved, axis=1).astype(jnp.int32)
+    return new_dist, send_val, new_last, sends

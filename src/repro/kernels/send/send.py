@@ -15,20 +15,22 @@ produces one SB-wide slot tile via the one-hot masked min-reduce (pure VPU
 work). The source-distance gather is the same 1-D dynamic gather from the
 VMEM-resident distance row the relax kernel uses.
 
-Grid ``(n_stiles, n_chunks, K)`` with the query axis INNERMOST: the edge
-chunk fetched for ``(tile, chunk)`` is reused by all K queries before the
-next chunk streams in. Because the grid iterates the chunk axis before the
-query axis, all chunks of tile ``i`` for query ``q`` are complete at
-``j == n_chunks - 1``, so the improvement mask against ``last_sent``, the
-``last_sent`` update, and the per-query send count all happen in-kernel at
-tile finalization — the kernel emits exactly what the solver's send phase
-needs, not a partial reduction.
+Grid ``(n_stiles, n_chunks)`` — NO query axis. Each edge chunk is fetched
+exactly once and all K queries reduce against it in-register via the
+batched one-hot reduce (``tile_min_batch``), the same layout-amortization
+the batched relax kernel proves: layout tile loads per round are
+``n_tiles``, not ``n_tiles × K``. Because the grid iterates chunks within
+a tile, all chunks of tile ``i`` are complete at ``j == n_chunks - 1``, so
+the improvement mask against ``last_sent``, the ``last_sent`` update, and
+the per-query send counts all happen in-kernel at tile finalization — the
+kernel emits exactly what the solver's send phase needs, not a partial
+reduction.
 
 VMEM working set per step:
   dist rows                 4 * K * block_pad
   last_sent / send_val / new_last rows   12 * K * S_pad
   edge chunk (src, w, segrel, pruned)    ~16 * EB
-  one-hot tile              4 * EB * SB   (dominant; 512*128*4 = 256 KiB)
+  one-hot expansion         4 * K * EB * SB   (dominant; batched reduce)
 """
 from __future__ import annotations
 
@@ -39,7 +41,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.tile_reduce import tile_min
+from repro.kernels.tile_reduce import tile_min_batch
 
 INF = float("inf")
 
@@ -48,20 +50,17 @@ def _send_pack_kernel(dist_ref, last_ref, valid_ref, src_ref, w_ref,
                       segrel_ref, pruned_ref, val_ref, newlast_ref, sends_ref,
                       count_ref, *, sb: int, n_stiles: int, n_chunks: int,
                       n_queries: int):
-    """Grid (slot tile i, edge chunk j, query q) — q innermost.
+    """Grid (slot tile i, edge chunk j) — whole query batch per step.
 
-    ``val_ref`` accumulates raw per-slot minima while tile (i, q) streams
-    its chunks; at the tile's last chunk it is rewritten in place as the
-    masked send value (INF where no improvement) and ``newlast_ref`` /
-    ``count_ref`` are updated. SMEM ``count_ref`` holds the per-query send
-    counters."""
+    ``val_ref`` accumulates raw per-slot minima for ALL K queries while
+    tile ``i`` streams its chunks; at the tile's last chunk it is rewritten
+    in place as the masked send value (INF where no improvement) and
+    ``newlast_ref`` / ``count_ref`` are updated. SMEM ``count_ref`` holds
+    the per-query send counters."""
     i = pl.program_id(0)
     j = pl.program_id(1)
-    q = pl.program_id(2)
-    first = (i == 0) & (j == 0) & (q == 0)
-    last = ((i == n_stiles - 1) & (j == n_chunks - 1)
-            & (q == n_queries - 1))
-    qrow = pl.dslice(q, 1)
+    first = (i == 0) & (j == 0)
+    last = (i == n_stiles - 1) & (j == n_chunks - 1)
     tile = pl.dslice(i * sb, sb)
 
     @pl.when(first)
@@ -71,27 +70,29 @@ def _send_pack_kernel(dist_ref, last_ref, valid_ref, src_ref, w_ref,
 
     @pl.when(j == 0)
     def _init_tile():
-        val_ref[qrow, tile] = jnp.full((1, sb), INF, jnp.float32)
+        val_ref[:, tile] = jnp.full((n_queries, sb), INF, jnp.float32)
 
-    # accumulate this chunk's candidates into the slot tile
+    # accumulate this chunk's candidates into the slot tile, all queries
     src = src_ref[0, 0, :]                    # [EB] int32 (padding = 0)
     w = jnp.where(pruned_ref[0, 0, :] > 0, INF, w_ref[0, 0, :])
     segrel = segrel_ref[0, 0, :]              # [EB] int32 in [0, sb)
-    d_src = jnp.take(dist_ref[qrow, :][0], src)
-    cand = d_src + w
-    mins = tile_min(cand, segrel, width=sb)
-    val_ref[qrow, tile] = jnp.minimum(val_ref[qrow, tile][0], mins)[None]
+    d_src = jnp.take(dist_ref[...], src, axis=1)      # [K, EB]
+    cand = d_src + w[None, :]
+    mins = tile_min_batch(cand, segrel, width=sb)     # [K, sb]
+    val_ref[:, tile] = jnp.minimum(val_ref[:, tile], mins)
 
-    # tile (i, q) complete: improvement mask + last_sent update + count
+    # tile i complete: improvement mask + last_sent update + counts
     @pl.when(j == n_chunks - 1)
     def _finalize_tile():
-        val = val_ref[qrow, tile][0]
-        prev = last_ref[qrow, tile][0]
-        valid = valid_ref[tile] > 0
+        val = val_ref[:, tile]                        # [K, sb]
+        prev = last_ref[:, tile]
+        valid = valid_ref[tile][None, :] > 0
         improved = valid & (val < prev)
-        val_ref[qrow, tile] = jnp.where(improved, val, INF)[None]
-        newlast_ref[qrow, tile] = jnp.where(improved, val, prev)[None]
-        count_ref[q] = count_ref[q] + jnp.sum(improved).astype(jnp.int32)
+        val_ref[:, tile] = jnp.where(improved, val, INF)
+        newlast_ref[:, tile] = jnp.where(improved, val, prev)
+        sums = jnp.sum(improved, axis=1).astype(jnp.int32)
+        for k in range(n_queries):
+            count_ref[k] = count_ref[k] + sums[k]
 
     @pl.when(last)
     def _fin():
@@ -112,10 +113,10 @@ def send_pack_tiled(dist_pad, last_pad, valid_pad, src_t, w_t, segrel_t,
     assert eb_l == eb and last_pad.shape == (nq, sp)
     assert valid_pad.shape == (sp,)
 
-    grid = (n_stiles, n_chunks, nq)
-    dist_spec = pl.BlockSpec((nq, bp), lambda i, j, q: (0, 0))
-    slot_spec = pl.BlockSpec((nq, sp), lambda i, j, q: (0, 0))
-    edge_spec = pl.BlockSpec((1, 1, eb), lambda i, j, q: (i, j, 0))
+    grid = (n_stiles, n_chunks)
+    dist_spec = pl.BlockSpec((nq, bp), lambda i, j: (0, 0))
+    slot_spec = pl.BlockSpec((nq, sp), lambda i, j: (0, 0))
+    edge_spec = pl.BlockSpec((1, 1, eb), lambda i, j: (i, j, 0))
     kernel = functools.partial(_send_pack_kernel, sb=sb, n_stiles=n_stiles,
                                n_chunks=n_chunks, n_queries=nq)
     return pl.pallas_call(
@@ -124,13 +125,13 @@ def send_pack_tiled(dist_pad, last_pad, valid_pad, src_t, w_t, segrel_t,
         in_specs=[
             dist_spec,
             slot_spec,
-            pl.BlockSpec((sp,), lambda i, j, q: (0,)),
+            pl.BlockSpec((sp,), lambda i, j: (0,)),
             edge_spec, edge_spec, edge_spec, edge_spec,
         ],
         out_specs=[
             slot_spec,                                     # masked send values
             slot_spec,                                     # updated last_sent
-            pl.BlockSpec((nq,), lambda i, j, q: (0,)),     # per-query sends
+            pl.BlockSpec((nq,), lambda i, j: (0,)),        # per-query sends
         ],
         out_shape=[
             jax.ShapeDtypeStruct((nq, sp), jnp.float32),

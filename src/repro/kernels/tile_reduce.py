@@ -21,3 +21,16 @@ def tile_min(cand, rel, *, width: int):
     lane = jax.lax.broadcasted_iota(jnp.int32, (eb, width), 1)
     onehot = rel[:, None] == lane
     return jnp.min(jnp.where(onehot, cand[:, None], INF), axis=0)
+
+
+def tile_min_batch(cand, rel, *, width: int):
+    """[K, EB] candidates -> [K, width] per-target minima.
+
+    The one-hot mask is built once from the shared [EB] target vector and
+    broadcast across the query axis, so a whole query batch reduces per
+    chunk load instead of re-streaming the chunk once per query."""
+    k, eb = cand.shape
+    lane = jax.lax.broadcasted_iota(jnp.int32, (eb, width), 1)
+    onehot = rel[:, None] == lane                          # [EB, width]
+    masked = jnp.where(onehot[None], cand[:, :, None], INF)
+    return jnp.min(masked, axis=1)

@@ -55,6 +55,12 @@ def main():
     p.add_argument("--merge-backend", default="xla", choices=["xla", "pallas"],
                    help="incoming scatter-min: XLA or the msg-tiled Pallas "
                         "kernel")
+    p.add_argument("--round", default="staged", choices=["staged", "fused"],
+                   help="round pipeline shape: 'staged' dispatches "
+                        "local/send/exchange/merge separately; 'fused' runs "
+                        "merge + relax fixpoint + send pack as ONE Pallas "
+                        "megakernel (2 dispatches/round, overrides "
+                        "--solver/--send-backend/--merge-backend)")
     p.add_argument("--delta", type=float, default=4.0)
     p.add_argument("--no-prune", action="store_true")
     p.add_argument("--backend", default="sim", choices=["sim", "shmap"])
@@ -126,7 +132,7 @@ def main():
                      local_solver=args.solver, delta=args.delta,
                      send_backend=args.send_backend,
                      merge_backend=args.merge_backend,
-                     warm_start=args.warm_start,
+                     warm_start=args.warm_start, round=args.round,
                      prune_online=not args.no_prune, faults=faults)
     if args.backend == "sim":
         engine = SsspEngine.build(sh, cfg, result_cache=args.result_cache)

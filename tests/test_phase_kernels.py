@@ -251,6 +251,7 @@ def test_phase_fns_compose_to_round():
     ("local_solver", "dijkstra"),
     ("send_backend", "cuda"),
     ("merge_backend", "triton"),
+    ("round", "megakernel"),
 ])
 def test_config_rejects_unknown_backends(field, bad):
     """Eager validation: the ValueError arrives at construction and names
@@ -265,6 +266,7 @@ def test_registry_lists_backends():
     assert set(phases.backends("exchange")) == {"bucket", "pmin", "a2a_dense"}
     assert set(phases.backends("local_solver")) == {"bellman", "delta",
                                                     "pallas"}
+    assert set(phases.backends("round")) == {"staged", "fused"}
     with pytest.raises(ValueError, match="valid:"):
         phases.resolve("send", "nope")
 
@@ -344,12 +346,17 @@ _ACCEPT_PROG = textwrap.dedent("""
         refs = np.stack([dijkstra_reference(g, s) for s in sources])
         sh = build_shards(g, 8, enumerate_triangles=False)
         mesh = compat.make_mesh((8,), ("d",))
-        cfg = SsspConfig(local_solver="pallas", send_backend="pallas",
-                         merge_backend="pallas", prune_online=False)
-        d, _ = solve_sim_batch(sh, sources, cfg)
-        assert np.allclose(d, refs, 1e-5, 1e-4), ("sim", name)
-        d, _ = solve_shmap_batch(sh, sources, cfg, mesh, ("d",))
-        assert np.allclose(d, refs, 1e-5, 1e-4), ("shmap", name)
+        for label, cfg in [
+            ("staged", SsspConfig(local_solver="pallas",
+                                  send_backend="pallas",
+                                  merge_backend="pallas",
+                                  prune_online=False)),
+            ("fused", SsspConfig(round="fused", prune_online=False)),
+        ]:
+            d, _ = solve_sim_batch(sh, sources, cfg)
+            assert np.allclose(d, refs, 1e-5, 1e-4), ("sim", label, name)
+            d, _ = solve_shmap_batch(sh, sources, cfg, mesh, ("d",))
+            assert np.allclose(d, refs, 1e-5, 1e-4), ("shmap", label, name)
         print(f"{name} OK")
     print("FULL PALLAS PIPELINE OK")
 """)
