@@ -120,6 +120,18 @@ class QueryResult:
     def q_converged(self) -> np.ndarray:
         return np.asarray(self.stats.q_converged)
 
+    @property
+    def overlap_fraction(self) -> float:
+        """Fraction of rounds where in-flight async payload coexisted with
+        local relax work — the measurable form of the deferred exchanges'
+        communication/computation overlap claim. 0.0 for synchronous
+        exchanges, zero-round (fully cache-served) solves, or results
+        predating the counter."""
+        if self.stats.overlap_rounds is None:
+            return 0.0
+        rounds = int(self.stats.rounds)
+        return float(int(self.stats.overlap_rounds)) / rounds if rounds else 0.0
+
 
 class QueryHandle:
     """A submitted-but-possibly-unsolved query batch; ``result()`` drains
@@ -219,9 +231,11 @@ class SsspEngine:
 
             self.round_fn = jax.jit(counted_round)
             self._cert_fn = jax.jit(counted_cert)
-            # fused round: the loop exits with one delivered-but-unmerged
-            # message batch in carry.incoming (see sssp.make_finalize)
-            fin = make_finalize(shards, cfg, vmapped=True)
+            # fused round / deferred (async) exchange: the loop can exit
+            # with delivered-but-unmerged messages in carry.incoming and
+            # undelivered payload in carry.inflight (see sssp.make_finalize)
+            fin = make_finalize(shards, cfg, SimComm(shards.n_parts),
+                                vmapped=True)
             self._finalize_fn = jax.jit(fin) if fin is not None else None
             self.shmap_solver = None
         else:
@@ -347,7 +361,7 @@ class SsspEngine:
                     break
             dist_pk = carry.dist
             if self._finalize_fn is not None:
-                dist_pk = self._finalize_fn(carry.dist, carry.incoming)
+                dist_pk = self._finalize_fn(carry)
             done_k = np.asarray(carry.done)[0][:k]  # globally agreed
             # [P, K, block] -> per-query global distance vectors
             dist = np.moveaxis(np.asarray(dist_pk), 0, 1)
@@ -365,7 +379,9 @@ class SsspEngine:
                 resends=np.sum(np.asarray(carry.resent), dtype=np.int32),
                 n_dispatches=np.int32(
                     int(np.asarray(carry.rounds))
-                    * dispatches_per_round(self.shards, self.cfg)))
+                    * dispatches_per_round(self.shards, self.cfg)),
+                overlap_rounds=np.int32(np.asarray(carry.overlap)),
+                bytes_moved=np.int32(np.asarray(carry.comm_bytes)))
         else:
             tc = time.perf_counter()
             if warm:
@@ -489,7 +505,8 @@ class SsspEngine:
                               msgs_recv=zero, pruned_edges=zero,
                               q_rounds=q_rounds, q_relaxations=q_relax,
                               q_converged=q_conv, stale_merges=zero,
-                              resends=zero, n_dispatches=zero)
+                              resends=zero, n_dispatches=zero,
+                              overlap_rounds=zero, bytes_moved=zero)
             self.batches_served += 1
         # _solve_batch already counted the uncached subset it ran
         self.queries_served += k - len(uncached)

@@ -189,17 +189,30 @@ class FaultyExchange(NamedTuple):
     """An ``ExchangeStage`` decorated with fault delivery: ``run`` is the
     untouched transfer (duck-type compatible with the plain stage);
     ``deliver`` is the per-shard injector the round applies to whatever
-    ``run`` produced, threading the in-carry :class:`FaultState`."""
+    ``run`` produced, threading the in-carry :class:`FaultState`. The
+    deferred-exchange protocol fields (``deferred``/``recv``/``push``/
+    ``init_inflight``/``flush``) pass through untouched: under an async
+    exchange the injector applies at DELIVERY time — when a lagged batch
+    leaves the in-flight buffer — so faults + anti-entropy resend compose
+    with the one-round lag unchanged (a resent copy simply rides the pipe
+    and heals ``lag`` rounds later; the in-flight pending bits hold every
+    detector open in the meantime)."""
     name: str
     dense: bool
     run: Any
     plan: FaultPlan
     deliver: Any    # (shard, dist, incoming, state, key) -> (inc', st', stale, pending)
+    deferred: bool = False
+    recv: Any = None
+    push: Any = None
+    init_inflight: Any = None
+    flush: Any = None
 
 
 def wrap_exchange(stage, plan: FaultPlan) -> FaultyExchange:
-    """Decorate a resolved exchange backend (bucket / pmin / a2a_dense)
-    with receiver-side fault injection under ``plan``.
+    """Decorate a resolved exchange backend (bucket / pmin / a2a_dense /
+    async / async_bucket / async_ppermute) with receiver-side fault
+    injection under ``plan``.
 
     The payload *kind* follows the stage's ``dense`` flag: dense incoming
     is already owner-addressed ``[K, block]`` (``d_target`` is the local
@@ -221,4 +234,9 @@ def wrap_exchange(stage, plan: FaultPlan) -> FaultyExchange:
             return out.reshape(incoming.shape), st, stale, pending
 
     return FaultyExchange(name=f"{stage.name}+faults", dense=stage.dense,
-                          run=stage.run, plan=plan, deliver=deliver)
+                          run=stage.run, plan=plan, deliver=deliver,
+                          deferred=getattr(stage, "deferred", False),
+                          recv=getattr(stage, "recv", None),
+                          push=getattr(stage, "push", None),
+                          init_inflight=getattr(stage, "init_inflight", None),
+                          flush=getattr(stage, "flush", None))

@@ -15,17 +15,25 @@ slot-tiled Pallas kernel). This module is the small registry that maps
 
 Registered phases and their config keys:
 
-  ============== ======================= ===========================
+  ============== ======================= ====================================
   phase          config key              backends
-  ============== ======================= ===========================
+  ============== ======================= ====================================
   round          ``cfg.round``           staged | fused
   local_solver   ``cfg.local_solver``    bellman | delta | pallas
   send           ``cfg.send_backend``    xla | pallas
-  exchange       ``cfg.exchange``        bucket | pmin | a2a_dense
+  exchange       ``cfg.exchange``        bucket | pmin | a2a_dense | async
+                                         | async_bucket | async_ppermute
   merge          ``cfg.merge_backend``   xla | pallas
   toka           ``cfg.toka``            toka0 | toka1 | toka2 | toka3
   warm_init      ``cfg.warm_start``      none | landmark
-  ============== ======================= ===========================
+  ============== ======================= ====================================
+
+The ``async*`` exchanges are DEFERRED: the round never barriers on their
+collective — round r's relax overlaps delivery of round r-1's sends,
+merged one round late (``async``/``async_bucket``: double-buffered
+all-to-all, ``cfg.async_lag`` buffers; ``async_ppermute``: bidirectional
+``ppermute`` neighbor hops over the partition ring). Registered in
+``sssp.py`` next to the synchronous stages.
 
 ``round`` selects the SHAPE of the pipeline rather than one phase's
 implementation: ``staged`` dispatches local/send/exchange/merge as

@@ -78,7 +78,8 @@ from repro.core.local_solver import local_fixpoint_batch
 from repro.core.shards import SsspShards
 from repro.core import trishla
 from repro.distributed.collectives import (
-    all_to_all_tiled, and_reduce, flat_rank, or_reduce, ring_permute,
+    all_to_all_tiled, and_reduce, flat_rank, flat_size, or_reduce,
+    ring_permute, ring_permute_rev,
 )
 from repro.kernels.merge import merge_scatter_pallas
 from repro.kernels.round import fused_round_pallas, fused_round_rescue
@@ -90,7 +91,9 @@ INF = jnp.float32(jnp.inf)
 @dataclasses.dataclass(frozen=True)
 class SsspConfig:
     exchange: str = "bucket"        # bucket | pmin | a2a_dense
+                                    #   | async | async_bucket | async_ppermute
     toka: str = "toka0"             # toka0 | toka1 | toka2 | toka3
+    async_lag: int = 1              # rounds a deferred exchange buffers sends
     local_solver: str = "bellman"   # bellman | delta | pallas
     send_backend: str = "xla"       # xla | pallas (cut-edge segment-min pack)
     merge_backend: str = "xla"      # xla | pallas (incoming scatter-min)
@@ -123,6 +126,15 @@ class SsspConfig:
                             f"{type(self.faults).__name__}")
         if self.toka3_safety <= 0:
             raise ValueError("toka3_safety must be > 0")
+        if self.async_lag < 1:
+            raise ValueError("async_lag must be >= 1 (1 = double-buffered)")
+        if self.async_lag != 1 and self.exchange not in ("async",
+                                                         "async_bucket"):
+            raise ValueError(
+                f"async_lag={self.async_lag} only applies to the buffered "
+                f"deferred exchanges ('async'/'async_bucket'); "
+                f"exchange={self.exchange!r} ignores it "
+                "(async_ppermute's lag is the ring distance)")
 
     @property
     def fault_plan(self) -> faults_mod.FaultPlan | None:
@@ -142,9 +154,11 @@ class SsspStats(NamedTuple):
     q_rounds: jax.Array = None        # [K] rounds each query was live
     q_relaxations: jax.Array = None   # [K] edge relaxations per query
     q_converged: jax.Array = None     # [K] detector-done mask per query
-    stale_merges: jax.Array = None    # improving late (queued) deliveries
+    stale_merges: jax.Array = None    # improving late (queued/lagged) deliveries
     resends: jax.Array = None         # anti-entropy retransmissions
     n_dispatches: jax.Array = None    # data-plane dispatches (rounds x per-round)
+    overlap_rounds: jax.Array = None  # rounds overlapping comm with compute
+    bytes_moved: jax.Array = None     # logical payload bytes on the wire
 
 
 class _Carry(NamedTuple):
@@ -167,6 +181,9 @@ class _Carry(NamedTuple):
     resent: Any       # [K] anti-entropy retransmissions
     incoming: Any = None   # fused round: delivered-but-unmerged messages
     front_any: Any = None  # fused round: [K] "some frontier bit next round"
+    inflight: Any = None   # deferred exchange: tuple of undelivered payloads
+    overlap: Any = None    # scalar: rounds with comm/compute overlap
+    comm_bytes: Any = None  # scalar: logical payload bytes this shard moved
 
 
 # --------------------------------------------------------------------------
@@ -345,6 +362,39 @@ class ShmapComm:
     def ring(self, tok):
         return ring_permute(tok, self.axes)
 
+    def size(self) -> int:
+        return flat_size(self.axes)
+
+    def dest_dirs(self):
+        """[P] bool routing table of the bidirectional ring transport:
+        True = destination column d travels the FORWARD ring from this
+        rank (ties at P/2 go forward). Routing the short way bounds every
+        message's delivery lag by floor(P/2) hops."""
+        Pn = self.size()
+        r = self.rank()
+        d = jnp.arange(Pn, dtype=jnp.int32)
+        return ((d - r) % Pn) <= ((r - d) % Pn)
+
+    def async_hop(self, fwd, bwd):
+        """One bidirectional ring hop of the dense transit buffers
+        ``[K, P, block]`` (column p = messages destined for rank p):
+        advance ``fwd`` one hop forward and ``bwd`` one hop backward,
+        deliver (and clear) the own-rank column of each. Each hop is a
+        collective-permute whose operand is carried state, available at
+        round START — XLA can run it concurrently with the relax kernel,
+        which is the whole overlap story of ``exchange='async_ppermute'``.
+        """
+        fwd = ring_permute(fwd, self.axes)
+        bwd = ring_permute_rev(bwd, self.axes)
+        r = self.rank()
+        inc = jnp.minimum(
+            lax.dynamic_index_in_dim(fwd, r, 1, keepdims=False),
+            lax.dynamic_index_in_dim(bwd, r, 1, keepdims=False))
+        clear = jnp.full_like(inc, INF)
+        fwd = lax.dynamic_update_index_in_dim(fwd, clear, r, 1)
+        bwd = lax.dynamic_update_index_in_dim(bwd, clear, r, 1)
+        return inc, fwd, bwd
+
     def min_all(self, x):
         return lax.pmin(x, self.axes)
 
@@ -383,6 +433,34 @@ class SimComm:
     def ring(self, tok):
         return jax.tree_util.tree_map(lambda x: jnp.roll(x, 1, axis=0), tok)
 
+    def size(self) -> int:
+        return self.P
+
+    def dest_dirs(self):
+        # stacked [P_src, P_dst] forward-routing mask (see ShmapComm)
+        Pn = self.P
+        r = self.rank()[:, None]
+        d = jnp.arange(Pn, dtype=jnp.int32)[None, :]
+        return ((d - r) % Pn) <= ((r - d) % Pn)
+
+    def async_hop(self, fwd, bwd):
+        # stacked [P, K, P, block]: the +1/-1 rolls over the shard axis
+        # are the single-device realization of the two ring permutes —
+        # bit-level oracle of the shmap transport (same hop schedule)
+        fwd = jnp.roll(fwd, 1, axis=0)
+        bwd = jnp.roll(bwd, -1, axis=0)
+
+        def one(f, b, r):
+            inc = jnp.minimum(
+                lax.dynamic_index_in_dim(f, r, 1, keepdims=False),
+                lax.dynamic_index_in_dim(b, r, 1, keepdims=False))
+            clear = jnp.full_like(inc, INF)
+            f = lax.dynamic_update_index_in_dim(f, clear, r, 1)
+            b = lax.dynamic_update_index_in_dim(b, clear, r, 1)
+            return inc, f, b
+
+        return jax.vmap(one)(fwd, bwd, self.rank())
+
     def all_any(self, flag):
         return jnp.broadcast_to(jnp.any(flag, axis=0), flag.shape)
 
@@ -401,10 +479,87 @@ class ExchangeStage(NamedTuple):
     """Registry entry for an exchange mode: ``dense`` selects the payload
     shape the send/merge stages build/consume ([K, P, block] vs the
     bucketed [K, P, C]); ``run(comm, payload)`` realizes the transfer on
-    either comm backend."""
+    either comm backend.
+
+    ``deferred=True`` marks an ASYNCHRONOUS exchange: the round does not
+    call ``run`` — it splits the transfer around the local compute so the
+    collective only ever consumes state carried from previous rounds
+    (``carry.inflight``), which is ready at round START and therefore
+    overlappable with the relax kernel:
+
+    - ``recv(comm, inflight) -> (incoming, inflight_mid)`` issues the
+      collective over carried payloads and returns this round's delivered
+      batch (round r receives what round r-1-lag sent);
+    - ``push(comm, inflight_mid, payload) -> inflight'`` enqueues this
+      round's fresh sends into the in-flight buffer (no collective);
+    - ``init_inflight(sh, nq, cfg, vmapped)`` builds the empty (+inf)
+      buffer pytree; ``flush(comm, inflight) -> [incoming, ...]`` drains
+      every undelivered batch at exit time (``make_finalize``).
+    """
     name: str
     dense: bool
     run: Any
+    deferred: bool = False
+    recv: Any = None
+    push: Any = None
+    init_inflight: Any = None
+    flush: Any = None
+
+
+def _async_bucket_recv(comm, inflight):
+    # the all_to_all consumes ONLY carried state -> overlappable; the
+    # oldest buffered payload is delivered, the rest keep aging
+    return comm.exchange_bucket(inflight[0]), inflight[1:]
+
+
+def _async_bucket_push(comm, inflight, payload):
+    return inflight + (payload,)
+
+
+def _async_bucket_init(sh, nq: int, cfg, vmapped: bool):
+    Pn, C = sh.n_parts, sh.recv_idx.shape[-1]
+    shape = (Pn, nq, Pn, C) if vmapped else (nq, Pn, C)
+    return tuple(jnp.full(shape, INF, jnp.float32)
+                 for _ in range(cfg.async_lag))
+
+
+def _async_bucket_flush(comm, inflight):
+    return [comm.exchange_bucket(b) for b in inflight]
+
+
+def _async_ppermute_recv(comm, inflight):
+    inc, fwd, bwd = comm.async_hop(*inflight)
+    return inc, (fwd, bwd)
+
+
+def _async_ppermute_push(comm, inflight, payload):
+    # min-combine fresh sends into the transit buffers: the dense payload
+    # is owner/vertex-addressed, so en-route combining is exact (bucketed
+    # slot positions are source-relative and could NOT be combined here)
+    fwd, bwd = inflight
+    go_fwd = comm.dest_dirs()
+    mask = (go_fwd[:, None, :, None] if go_fwd.ndim == 2
+            else go_fwd[None, :, None])
+    fwd = jnp.minimum(fwd, jnp.where(mask, payload, INF))
+    bwd = jnp.minimum(bwd, jnp.where(mask, INF, payload))
+    return (fwd, bwd)
+
+
+def _async_ppermute_init(sh, nq: int, cfg, vmapped: bool):
+    Pn, blk = sh.n_parts, sh.block
+    shape = (Pn, nq, Pn, blk) if vmapped else (nq, Pn, blk)
+    z = jnp.full(shape, INF, jnp.float32)
+    return (z, z)
+
+
+def _async_ppermute_flush(comm, inflight):
+    # short-way routing bounds any message's remaining ring distance by
+    # floor(P/2) hops; min-merge order is irrelevant (monotone merge)
+    out = []
+    for _ in range(comm.size() // 2):
+        inc, inflight = _async_ppermute_recv(comm, inflight)
+        out.append(inc)
+    return out
 
 
 phases.register("exchange", "bucket")(ExchangeStage(
@@ -413,6 +568,28 @@ phases.register("exchange", "pmin")(ExchangeStage(
     "pmin", dense=True, run=lambda comm, p: comm.exchange_pmin(p)))
 phases.register("exchange", "a2a_dense")(ExchangeStage(
     "a2a_dense", dense=True, run=lambda comm, p: comm.exchange_a2a_dense(p)))
+
+# deferred (asynchronous) exchanges: round r's relax runs concurrently
+# with delivery of round r-1's sends, merged one round late. "async" is
+# the double-buffered bucketed all-to-all (cfg.async_lag buffers; the
+# sim realization is the bit-level oracle of the shmap one);
+# "async_ppermute" decomposes the dense all-to-all into bidirectional
+# ppermute neighbor hops over the partition ring — per-round latency is
+# one neighbor hop instead of a full all-to-all barrier, at the price of
+# ring-distance delivery lag (extra rounds). The ``run`` members are the
+# synchronous realizations, used only by phase-isolation tooling.
+_ASYNC_BUCKET = ExchangeStage(
+    "async", dense=False, run=lambda comm, p: comm.exchange_bucket(p),
+    deferred=True, recv=_async_bucket_recv, push=_async_bucket_push,
+    init_inflight=_async_bucket_init, flush=_async_bucket_flush)
+phases.register("exchange", "async")(_ASYNC_BUCKET)
+phases.register("exchange", "async_bucket")(
+    _ASYNC_BUCKET._replace(name="async_bucket"))
+phases.register("exchange", "async_ppermute")(ExchangeStage(
+    "async_ppermute", dense=True,
+    run=lambda comm, p: comm.exchange_a2a_dense(p),
+    deferred=True, recv=_async_ppermute_recv, push=_async_ppermute_push,
+    init_inflight=_async_ppermute_init, flush=_async_ppermute_flush))
 
 # round pipeline shape: the staged local/send/merge phase chain, or the
 # whole-round Pallas megakernel (kernels/round) with one data-plane
@@ -457,6 +634,52 @@ def _quiescent(comm, new_active):
     """Globally-agreed [K] mask: no shard has a live frontier for query k."""
     idle = ~jnp.any(new_active, axis=-1)            # [K] (or [P, K] in sim)
     return comm.all_all(idle), idle
+
+
+def _pending_inflight(inflight, vmapped: bool):
+    """Per-query "this shard still holds undelivered async payload" bits
+    ([K], or [P, K] stacked) — the deferred-exchange analogue of the fault
+    queue's ``pending``: ORed into the termination view so no detector can
+    declare quiescence over in-flight messages."""
+    lead = 2 if vmapped else 1
+    bits = None
+    for a in jax.tree_util.tree_leaves(inflight):
+        b = jnp.any(jnp.isfinite(a), axis=tuple(range(lead, a.ndim)))
+        bits = b if bits is None else (bits | b)
+    return bits
+
+
+def _mask_payload(payload):
+    """Mask unused per-(query, destination) payload columns to +inf and
+    price this round's transfer. A column is used iff the send pack routed
+    at least one ``last_sent`` improvement into it, so finiteness over the
+    trailing slot/vertex axis IS the improvement-count mask; the masking
+    enforces (rather than assumes) that unimproved columns ship no values,
+    and the byte count is the honest wire cost the dense payloads hide at
+    high P: 4 B x column width x used columns, summed over queries and
+    destination ranks (and, in the stacked sim, over sender shards)."""
+    used = jnp.any(jnp.isfinite(payload), axis=-1)
+    nbytes = (jnp.int32(4 * payload.shape[-1])
+              * jnp.sum(used).astype(jnp.int32))
+    return jnp.where(used[..., None], payload, INF), nbytes
+
+
+def _count_improving(shard: SsspShards, dist, incoming, dense: bool):
+    """[K] improving deliveries of a batch vs the pre-merge distances.
+
+    Under a deferred exchange EVERY delivered batch is at least one round
+    old, so its improving merges are by definition stale merges — this is
+    the per-round ``stale_merges`` accounting for the async modes (the
+    fault injector's own stale counter is skipped there: queue releases
+    are already min-merged into the delivered batch, and counting the
+    final batch once avoids double counting)."""
+    if dense:
+        return jnp.sum(incoming < dist, axis=-1).astype(jnp.int32)
+    nq = dist.shape[0]
+    flat = incoming.reshape(nq, -1)
+    d_t = jnp.take(dist, shard.recv_idx.reshape(-1), axis=1, mode="fill",
+                   fill_value=-float("inf"))
+    return jnp.sum(flat < d_t, axis=-1).astype(jnp.int32)
 
 
 # Per-query termination stages: every detector runs K independent instances
@@ -529,13 +752,28 @@ def _toka3_stage(cfg, comm, carry, new_active, sends, recvs, inter_edges,
     # agreed by one all-reduce, so every shard advances the same streak
     # and the vote needs no second collective.
     slack = 0 if cfg.fault_plan is None else cfg.fault_plan.fault_slack
-    bound = toka_mod.toka3_bound(inter_edges, n_parts, cfg.toka3_safety,
+    ex_st = phases.resolve("exchange", cfg.exchange)
+    if getattr(ex_st, "deferred", False):
+        # a deferred exchange keeps messages legitimately in flight across
+        # round boundaries: widen the timeout by the worst-case delivery
+        # lag (the buffered rounds, plus the short-way ring radius for the
+        # dense hop transport). The pending bits already hold the streak
+        # at zero while payload is in flight; the slack covers the gap
+        # between a send and its first visibility as pending activity.
+        slack += cfg.async_lag + (n_parts // 2 if ex_st.dense else 0)
+    # the bound must be computed from the GLOBAL cut count: a per-shard
+    # bound lets devices disagree on the timeout, which under shard_map
+    # means different while-loop trip counts — a collective rendezvous
+    # deadlock. comm.total() also matches the host-side toka3_timeout
+    # tool, which has always taken the total inter-edge count.
+    ie_total = comm.total(jnp.asarray(inter_edges).astype(jnp.int32))
+    bound = toka_mod.toka3_bound(ie_total, n_parts, cfg.toka3_safety,
                                  slack)
     act = jnp.any(new_active, axis=-1) | (sends > 0) | (recvs > 0)
     busy = comm.all_any(act)
     streak = jnp.where(busy, 0, carry.streak + 1)
     if vmapped:
-        bound = bound[:, None]          # [P] inter_edges -> broadcast [P, K]
+        bound = bound[:, None]          # [P] totals -> broadcast [P, K]
     return streak >= bound, carry.toka2, streak
 
 
@@ -639,20 +877,28 @@ def _phase_fused_rescue(shard: SsspShards, dist, resid, last_sent, pruned, *,
     return new_dist, payload, new_last, sends, nrel_extra
 
 
-def make_finalize(sh: SsspShards, cfg: SsspConfig, vmapped: bool):
-    """Exit-time merge for the fused round, or None for staged rounds.
+def make_finalize(sh: SsspShards, cfg: SsspConfig, comm, vmapped: bool):
+    """Exit-time ``fn(carry) -> dist`` merging every delivered-but-unmerged
+    and in-flight message batch, or None when nothing can be outstanding
+    (staged round + synchronous exchange).
 
     The fused round rotates the phase chain — a round merges the PREVIOUS
     round's delivered messages — so the loop can exit with one batch of
-    delivered-but-unmerged messages in ``carry.incoming``. Their receive /
-    activity accounting already happened when they were delivered; only
-    the value merge is outstanding, and it cannot change any converged
-    query's distances (termination required no improving message). The
-    merge still runs unconditionally: correctness of the final distances
-    must not depend on the detector's reasoning."""
-    if _round_mode(sh, cfg) != "fused":
+    delivered-but-unmerged messages in ``carry.incoming``. A deferred
+    (async) exchange can additionally exit with undelivered payload in
+    ``carry.inflight`` (e.g. a ``max_rounds`` or toka1-budget exit while
+    messages ride the pipe): its ``flush`` drains every buffered batch
+    here. In both cases accounting already happened (or the detectors held
+    termination open via the pending bits); only the value merges are
+    outstanding, and min-merge order is irrelevant. The merges run
+    unconditionally: correctness of the final distances must not depend on
+    the detector's reasoning."""
+    ex = phases.resolve("exchange", cfg.exchange)
+    deferred = bool(getattr(ex, "deferred", False))
+    fused = _round_mode(sh, cfg) == "fused"
+    if not fused and not deferred:
         return None
-    dense = phases.resolve("exchange", cfg.exchange).dense
+    dense = ex.dense
 
     def fin(shard, dist, incoming):
         if dense:
@@ -664,8 +910,20 @@ def make_finalize(sh: SsspShards, cfg: SsspConfig, vmapped: bool):
             lambda d, v: d.at[flat_idx].min(v, mode="drop"))(dist, flat_val)
 
     if vmapped:
-        return lambda dist, incoming: jax.vmap(fin)(sh, dist, incoming)
-    return lambda dist, incoming: fin(sh, dist, incoming)
+        merge = lambda dist, incoming: jax.vmap(fin)(sh, dist, incoming)
+    else:
+        merge = lambda dist, incoming: fin(sh, dist, incoming)
+
+    def finalize(carry: _Carry):
+        dist = carry.dist
+        if fused:
+            dist = merge(dist, carry.incoming)
+        if deferred:
+            for inc in ex.flush(comm, carry.inflight):
+                dist = merge(dist, inc)
+        return dist
+
+    return finalize
 
 
 def _make_round_fused(sh: SsspShards, cfg: SsspConfig, comm, vmapped: bool,
@@ -688,6 +946,7 @@ def _make_round_fused(sh: SsspShards, cfg: SsspConfig, comm, vmapped: bool,
     if fp is not None:
         ex = faults_mod.wrap_exchange(ex, fp)
     dense = ex.dense
+    deferred = bool(getattr(ex, "deferred", False))
     toka_f = phases.resolve("toka", cfg.toka)
     fused_f = partial(_phase_fused, dense=dense, cfg=cfg)
     rescue_f = partial(_phase_fused_rescue, dense=dense, cfg=cfg)
@@ -710,10 +969,13 @@ def _make_round_fused(sh: SsspShards, cfg: SsspConfig, comm, vmapped: bool,
         batch against the post-relax distances — the staged merge phase's
         accounting, computed WITHOUT merging (the values merge next
         round). Bucket: a message improves iff it beats the distance at
-        its routed target (sentinel rows gather -inf, never true)."""
+        its routed target (sentinel rows gather -inf, never true). Also
+        returns the improving-delivery count ``n_imp`` — the deferred
+        exchanges' stale-merge tally (see :func:`_count_improving`)."""
         if dense:
-            recvs = jnp.sum(incoming < dist, axis=-1).astype(jnp.int32)
-            any_imp = jnp.any(incoming < dist, axis=-1)
+            n_imp = jnp.sum(incoming < dist, axis=-1).astype(jnp.int32)
+            recvs = n_imp
+            any_imp = n_imp > 0
         else:
             nq = dist.shape[0]
             flat = incoming.reshape(nq, -1)
@@ -721,8 +983,9 @@ def _make_round_fused(sh: SsspShards, cfg: SsspConfig, comm, vmapped: bool,
             recvs = jnp.sum(jnp.isfinite(flat), axis=-1).astype(jnp.int32)
             d_t = jnp.take(dist, idx, axis=1, mode="fill",
                            fill_value=-float("inf"))
-            any_imp = jnp.any(flat < d_t, axis=-1)
-        return any_imp, recvs
+            n_imp = jnp.sum(flat < d_t, axis=-1).astype(jnp.int32)
+            any_imp = n_imp > 0
+        return any_imp, recvs, n_imp
 
     deliver_f = getattr(ex, "deliver", None)
     prune_v, fused_v, rescue_v, account_v = (prune_f, fused_f, rescue_f,
@@ -738,6 +1001,18 @@ def _make_round_fused(sh: SsspShards, cfg: SsspConfig, comm, vmapped: bool,
     def rounds_fn(carry: _Carry) -> _Carry:
         live = ~carry.done                             # [K] ([P, K] sim)
         idle = ~jnp.any(carry.front_any & live, axis=-1)
+
+        # deferred exchange: issue the collective FIRST — it consumes only
+        # carried state, so XLA is free to overlap it with the megakernel.
+        # With async the total merge lag is 2 (one round of incoming
+        # rotation + one round in flight); correctness is lag-independent
+        # (monotone min merge), only round counts move.
+        incoming_new = inflight_mid = delivering = None
+        if deferred:
+            pend0 = _pending_inflight(carry.inflight, vmapped)
+            delivering = jnp.any(pend0, axis=-1)    # per-shard bool
+            incoming_new, inflight_mid = ex.recv(comm, carry.inflight)
+
         pruned, cursor = prune_v(sh, idle, carry.pruned, carry.tri_cursor)
         # injected frontier (warm-start seeds / source bits on round 0;
         # zeroed by every fused round thereafter)
@@ -773,7 +1048,12 @@ def _make_round_fused(sh: SsspShards, cfg: SsspConfig, comm, vmapped: bool,
             jnp.any(resid > 0), rescue, keep,
             (dist, payload, last_sent, sends, nrel, resid, last_in, pruned))
 
-        incoming = ex.run(comm, payload)
+        payload, nbytes = _mask_payload(payload)
+        if deferred:
+            inflight = ex.push(comm, inflight_mid, payload)
+        else:
+            incoming_new = ex.run(comm, payload)
+            inflight = carry.inflight
 
         fstate, stale, pending = carry.faults, None, None
         if deliver_f is not None:
@@ -787,27 +1067,39 @@ def _make_round_fused(sh: SsspShards, cfg: SsspConfig, comm, vmapped: bool,
                 keys = jax.vmap(lambda r: jax.random.fold_in(rkey, r))(rank)
             else:
                 keys = jax.random.fold_in(rkey, rank)
-            incoming, fstate, stale, pending = deliver_f(
-                sh, dist, incoming, fstate, keys)
+            incoming_new, fstate, stale, pending = deliver_f(
+                sh, dist, incoming_new, fstate, keys)
 
-        any_imp, recvs = account_v(sh, dist, incoming)
+        any_imp, recvs, n_imp = account_v(sh, dist, incoming_new)
 
         # the detectors only consume any(new_active, -1), so a synthetic
         # [.., K, 1] mask carrying the any-improvement bit is equivalent
         # to the staged merge's full frontier plane
         toka_flag = any_imp
         if pending is not None:
-            toka_flag = any_imp | pending
+            toka_flag = toka_flag | pending
+        if deferred:
+            toka_flag = toka_flag | _pending_inflight(inflight, vmapped)
         done, toka2, streak = toka_f(
             cfg, comm, carry, toka_flag[..., None], sends, recvs,
             sh.inter_edges, n_parts, comm.rank(), vmapped)
 
         stale_c, resent_c = carry.stale, carry.resent
-        if stale is not None:
+        if deferred:
+            # every delivered batch is >= 1 round old: its improving
+            # merges ARE the stale merges (queue releases were already
+            # min-merged into it, so the injector's counter is skipped)
+            stale_c = stale_c + n_imp
+        elif stale is not None:
             stale_c = stale_c + stale
         if resend_now is not None:
             resent_c = resent_c + jnp.where(resend_now, sends,
                                             0).astype(jnp.int32)
+        overlap_c = carry.overlap
+        if deferred:
+            flag = delivering & ~idle
+            bit = jnp.any(flag) if vmapped else comm.all_any(flag)
+            overlap_c = overlap_c + bit.astype(jnp.int32)
         running = (~carry.done).astype(jnp.int32)
         return _Carry(
             dist=dist, active=jnp.zeros_like(carry.active), pruned=pruned,
@@ -819,7 +1111,8 @@ def _make_round_fused(sh: SsspShards, cfg: SsspConfig, comm, vmapped: bool,
             msgs_sent=carry.msgs_sent + sends.astype(jnp.int32),
             msgs_recv=carry.msgs_recv + recvs.astype(jnp.int32),
             faults=fstate, streak=streak, stale=stale_c, resent=resent_c,
-            incoming=incoming, front_any=any_imp)
+            incoming=incoming_new, front_any=any_imp, inflight=inflight,
+            overlap=overlap_c, comm_bytes=carry.comm_bytes + nbytes)
 
     return rounds_fn
 
@@ -836,17 +1129,32 @@ def _make_round(shard_or_stack: SsspShards, cfg: SsspConfig, comm, vmapped: bool
         return _make_round_fused(sh, cfg, comm, vmapped, n_parts)
     pipe = build_pipeline(sh, cfg)
     fp = cfg.fault_plan
+    ex = pipe.exchange
+    deferred = bool(getattr(ex, "deferred", False))
 
     local_f, send_f, merge_f = pipe.local, pipe.send, pipe.merge
     deliver_f = getattr(pipe.exchange, "deliver", None)
+    stale_f = partial(_count_improving, dense=ex.dense)
     if vmapped:
         local_f = jax.vmap(local_f)
         send_f = jax.vmap(send_f)
         merge_f = jax.vmap(merge_f)
+        stale_f = jax.vmap(stale_f)
         if deliver_f is not None:
             deliver_f = jax.vmap(deliver_f)
 
     def rounds_fn(carry: _Carry) -> _Carry:
+        # deferred exchange: the collective is issued FIRST and consumes
+        # only carried state (round r delivers round r-1-lag's sends), so
+        # XLA is free to overlap it with the local relax below — the
+        # paper's asynchronous mode: no per-round barrier between a
+        # shard's compute and the delivery of its neighbors' messages
+        incoming = inflight_mid = delivering = None
+        if deferred:
+            pend0 = _pending_inflight(carry.inflight, vmapped)
+            delivering = jnp.any(pend0, axis=-1)    # per-shard bool
+            incoming, inflight_mid = ex.recv(comm, carry.inflight)
+
         # converged-query mask: finished queries stop relaxing and sending
         # while stragglers run (their frontier is forced empty)
         act = carry.active & ~carry.done[..., None]
@@ -874,7 +1182,12 @@ def _make_round(shard_or_stack: SsspShards, cfg: SsspConfig, comm, vmapped: bool
             last_in = jnp.where(resend_now[..., None], INF, carry.last_sent)
 
         payload, last_sent, sends = send_f(sh, dist, pruned, last_in)
-        incoming = pipe.exchange.run(comm, payload)
+        payload, nbytes = _mask_payload(payload)
+        if deferred:
+            inflight = ex.push(comm, inflight_mid, payload)
+        else:
+            incoming = ex.run(comm, payload)
+            inflight = carry.inflight
 
         fstate, stale, pending = carry.faults, None, None
         if deliver_f is not None:
@@ -894,24 +1207,47 @@ def _make_round(shard_or_stack: SsspShards, cfg: SsspConfig, comm, vmapped: bool
             incoming, fstate, stale, pending = deliver_f(
                 sh, dist, incoming, fstate, keys)
 
+        stale_async = None
+        if deferred:
+            # improving entries of the FINAL delivered batch (post fault
+            # injection) against the pre-merge distances: under a lagged
+            # delivery every improving merge is by definition stale
+            stale_async = stale_f(sh, dist, incoming)
+
         dist, new_active, recvs = merge_f(sh, dist, incoming)
 
         # termination sees pending in-flight state as activity; the real
         # frontier stays clean (a fake frontier bit would cause spurious
         # relaxation work, not just a held-open detector)
+        pend_bits = pending
+        if deferred:
+            ab = _pending_inflight(inflight, vmapped)
+            pend_bits = ab if pend_bits is None else (pend_bits | ab)
         toka_active = new_active
-        if pending is not None:
-            toka_active = new_active | pending[..., None]
+        if pend_bits is not None:
+            toka_active = new_active | pend_bits[..., None]
         done, toka2, streak = pipe.toka(
             cfg, comm, carry, toka_active, sends, recvs, sh.inter_edges,
             n_parts, comm.rank(), vmapped)
 
         stale_c, resent_c = carry.stale, carry.resent
-        if stale is not None:
+        if stale_async is not None:
+            # the injector's own stale counter is skipped: queue releases
+            # are already min-merged into the delivered batch above
+            stale_c = stale_c + stale_async
+        elif stale is not None:
             stale_c = stale_c + stale
         if resend_now is not None:
             resent_c = resent_c + jnp.where(resend_now, sends,
                                             0).astype(jnp.int32)
+        overlap_c = carry.overlap
+        if deferred:
+            # a round overlaps when some shard had payload on the wire
+            # while some shard had a live frontier to relax
+            computing = jnp.any(act, axis=(-2, -1))
+            flag = delivering & computing
+            bit = jnp.any(flag) if vmapped else comm.all_any(flag)
+            overlap_c = overlap_c + bit.astype(jnp.int32)
         running = (~carry.done).astype(jnp.int32)
         return _Carry(
             dist=dist, active=new_active, pruned=pruned, tri_cursor=cursor,
@@ -921,7 +1257,9 @@ def _make_round(shard_or_stack: SsspShards, cfg: SsspConfig, comm, vmapped: bool
             relaxations=carry.relaxations + nrel.astype(jnp.int32),
             msgs_sent=carry.msgs_sent + sends.astype(jnp.int32),
             msgs_recv=carry.msgs_recv + recvs.astype(jnp.int32),
-            faults=fstate, streak=streak, stale=stale_c, resent=resent_c)
+            faults=fstate, streak=streak, stale=stale_c, resent=resent_c,
+            inflight=inflight, overlap=overlap_c,
+            comm_bytes=carry.comm_bytes + nbytes)
 
     return rounds_fn
 
@@ -1048,6 +1386,15 @@ def _init_carry(sh: SsspShards, sources, cfg: SsspConfig, rank,
         fstate = faults_mod.init_state(fp, nq, n_msgs,
                                        n_parts if vmapped else None)
 
+    ex_stage = phases.resolve("exchange", cfg.exchange)
+    inflight = None
+    if getattr(ex_stage, "deferred", False):
+        # empty (+inf) in-flight buffers: round 0's recv delivers nothing,
+        # round 0's sends arrive in round async_lag (ring distance for the
+        # hop transport) — the generalized form of the fused round's
+        # incoming rotation, deferring the exchange itself
+        inflight = ex_stage.init_inflight(sh, nq, cfg, vmapped)
+
     incoming = front_any = None
     if _round_mode(sh, cfg) == "fused":
         # the fused carry holds last round's delivered-but-unmerged
@@ -1068,7 +1415,9 @@ def _init_carry(sh: SsspShards, sources, cfg: SsspConfig, rank,
                   rounds=jnp.zeros((), jnp.int32), q_rounds=zeroq,
                   relaxations=zeroq, msgs_sent=zeroq, msgs_recv=zeroq,
                   faults=fstate, streak=zeroq, stale=zeroq, resent=zeroq,
-                  incoming=incoming, front_any=front_any)
+                  incoming=incoming, front_any=front_any, inflight=inflight,
+                  overlap=jnp.zeros((), jnp.int32),
+                  comm_bytes=jnp.zeros((), jnp.int32))
 
 
 # --------------------------------------------------------------------------
@@ -1211,9 +1560,8 @@ def build_shmap_solver_traced(sh_spec: SsspShards, cfg: SsspConfig, mesh,
             return (~jnp.all(c.done)) & (c.rounds < cfg.max_rounds)
 
         carry = lax.while_loop(cond, round_fn, carry)
-        fin = make_finalize(sh1, cfg, vmapped=False)
-        dist_final = (carry.dist if fin is None
-                      else fin(carry.dist, carry.incoming))
+        fin = make_finalize(sh1, cfg, comm, vmapped=False)
+        dist_final = carry.dist if fin is None else fin(carry)
         dpr = jnp.int32(dispatches_per_round(sh1, cfg))
         stats = SsspStats(
             rounds=carry.rounds,
@@ -1226,14 +1574,16 @@ def build_shmap_solver_traced(sh_spec: SsspShards, cfg: SsspConfig, mesh,
             q_converged=carry.done,
             stale_merges=comm.total(jnp.sum(carry.stale)),
             resends=comm.total(jnp.sum(carry.resent)),
-            n_dispatches=carry.rounds * dpr)
+            n_dispatches=carry.rounds * dpr,
+            overlap_rounds=carry.overlap,     # globally agreed each round
+            bytes_moved=comm.total(carry.comm_bytes))
         return dist_final[None], stats  # restore leading P dim
 
     pspec = P(axes)
     rspec = P()
     in_specs = jax.tree_util.tree_map(lambda _: pspec, sh_spec)
     in_specs = (in_specs, rspec, rspec) + ((pspec,) if warm else ())
-    out_specs = (pspec, SsspStats(*([rspec] * 11)))
+    out_specs = (pspec, SsspStats(*([rspec] * len(SsspStats._fields))))
     shm = compat.shard_map(body, mesh=mesh, in_specs=in_specs,
                            out_specs=out_specs, check_vma=False)
 

@@ -34,6 +34,19 @@ white (DFG rule). Under BSP no messages are in flight at round boundaries,
 so counters sum to zero globally at every check — the color mechanism does
 the real work; counters are kept for fidelity (and would matter on a truly
 asynchronous transport).
+
+Deferred (async) exchanges — the truly asynchronous transport the paper
+assumes — interact with every detector through the round's termination
+view: payload buffered in ``carry.inflight`` sets per-query *pending* bits
+that are ORed into the activity mask (exactly like the FaultPlan delay
+queue), so no detector can declare quiescence while messages ride the
+pipe. toka2's counters now earn their keep: under ``exchange="async"`` the
+global sent-received sum stays positive for exactly the in-flight rounds
+(Safra's invariant, exercised for real); the dense ``async_ppermute`` runs
+the color-only variant, which stays sound because an in-flight message
+always sits in SOME shard's transit buffer, and that shard's pending bit
+blocks ordinary token forwarding. toka3 additionally widens its bound by
+the worst-case delivery lag (see the slack computation in ``sssp.py``).
 """
 from __future__ import annotations
 

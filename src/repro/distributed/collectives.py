@@ -86,21 +86,35 @@ def ring_permute(x, axis_names):
     earlier axes applied only to ranks whose lower-order indices wrapped to
     zero (i.e. the carry positions).
     """
+    return _ring_shift(x, axis_names, step=1)
+
+
+def ring_permute_rev(x, axis_names):
+    """Retreat ``x`` one hop along the row-major ring: the value previously
+    held by rank r lives on rank (r - 1) mod P afterwards. The backward
+    direction of the bidirectional ``async_ppermute`` transport — routing a
+    message the short way around the ring halves its worst-case delivery
+    lag versus a single forward ring."""
+    return _ring_shift(x, axis_names, step=-1)
+
+
+def _ring_shift(x, axis_names, step: int):
     names = tuple(axis_names)
     sizes = axis_sizes(names)
 
     def shift(v, name, size):
-        perm = [(i, (i + 1) % size) for i in range(size)]
+        perm = [(i, (i + step) % size) for i in range(size)]
         return lax.ppermute(v, name, perm)
 
-    # shift along the last axis; values that wrapped (arrived at index 0)
-    # must additionally be shifted along the next-more-significant axis,
-    # cascading leftward.
+    # shift along the last axis; values that wrapped (arrived at index 0
+    # going forward, index size-1 going backward) must additionally be
+    # shifted along the next-more-significant axis, cascading leftward.
+    wrap_to = (lambda size: 0) if step > 0 else (lambda size: size - 1)
     y = shift(x, names[-1], sizes[-1])
-    carry_mask = lax.axis_index(names[-1]) == 0
+    carry_mask = lax.axis_index(names[-1]) == wrap_to(sizes[-1])
     for k in range(len(names) - 2, -1, -1):
         y_carry = shift(y, names[k], sizes[k])
         y = jax.tree_util.tree_map(
             lambda a, b: jnp.where(carry_mask, b, a), y, y_carry)
-        carry_mask = carry_mask & (lax.axis_index(names[k]) == 0)
+        carry_mask = carry_mask & (lax.axis_index(names[k]) == wrap_to(sizes[k]))
     return y

@@ -43,6 +43,17 @@ VMEM working set per step (bucket exchange):
   send val / last / new_last    12 * K * S_pad
   active stage's chunk          ~16 * EB
   one-hot expansion              4 * K * EB * width   (dominant)
+
+The kernel is exchange-agnostic: the ``incoming`` operand is whatever
+delivery the round hands it. Under the synchronous exchanges that is the
+previous round's collective output held in ``carry.incoming``; under the
+DEFERRED exchanges (``exchange="async*"``) it is a delivery that left its
+sender one or more rounds earlier — the solver issues the collective for
+the in-flight buffer at the top of the round, so nothing in this kernel's
+dataflow depends on it and XLA is free to run the collective concurrently
+with the whole grid. The scatter-min merge of stage 0 is monotone and
+idempotent, which is exactly why merge lag is a round-count effect, never
+a correctness one.
 """
 from __future__ import annotations
 

@@ -44,7 +44,18 @@ def main():
                    help="batched query mode; equivalent to --num-sources 8 "
                         "unless --sources/--num-sources pick the batch")
     p.add_argument("--exchange", default="bucket",
-                   choices=["bucket", "pmin", "a2a_dense"])
+                   choices=["bucket", "pmin", "a2a_dense", "async",
+                            "async_bucket", "async_ppermute"],
+                   help="message exchange: synchronous (bucket/pmin/"
+                        "a2a_dense barrier every round) or deferred "
+                        "(async/async_bucket double-buffer the all-to-all, "
+                        "async_ppermute streams bidirectional ring hops) — "
+                        "deferred exchanges overlap round r's relax with "
+                        "round r-1's delivery, same distances, more rounds")
+    p.add_argument("--async-lag", type=int, default=1,
+                   help="in-flight buffer depth for --exchange async/"
+                        "async_bucket (rounds between send and delivery; "
+                        "async_ppermute's lag is the ring distance)")
     p.add_argument("--toka", default="toka0",
                    choices=["toka0", "toka1", "toka2", "toka3"])
     p.add_argument("--solver", default="bellman",
@@ -93,6 +104,10 @@ def main():
     args = p.parse_args()
     if args.warm_start == "landmark" and args.landmarks < 1:
         p.error("--warm-start landmark requires --landmarks N (N >= 1)")
+    if args.async_lag < 1:
+        p.error("--async-lag must be >= 1 (1 = double-buffered)")
+    if args.async_lag != 1 and args.exchange not in ("async", "async_bucket"):
+        p.error("--async-lag only applies to --exchange async/async_bucket")
     faults = None
     if (args.fault_drop or args.fault_delay or args.fault_duplicate
             or args.fault_reorder):
@@ -133,7 +148,8 @@ def main():
                      send_backend=args.send_backend,
                      merge_backend=args.merge_backend,
                      warm_start=args.warm_start, round=args.round,
-                     prune_online=not args.no_prune, faults=faults)
+                     prune_online=not args.no_prune, faults=faults,
+                     async_lag=args.async_lag)
     if args.backend == "sim":
         engine = SsspEngine.build(sh, cfg, result_cache=args.result_cache)
     else:
@@ -167,6 +183,12 @@ def main():
           + (" [warm-started]" if res.warm_started else ""))
     print(f"status: {res.status} "
           f"(converged {int(res.q_converged.sum())}/{len(sources)} queries)")
+    if args.exchange.startswith("async"):
+        print(f"async: overlap={res.overlap_fraction:.2f} "
+              f"({int(stats.overlap_rounds)}/{int(stats.rounds)} rounds "
+              f"comm/compute overlapped)  "
+              f"stale_merges={int(np.asarray(stats.stale_merges).sum())}  "
+              f"bytes_moved={int(stats.bytes_moved)}  lag={args.async_lag}")
     if faults is not None:
         print(f"faults: {faults}  stale_merges={int(stats.stale_merges)} "
               f"resends={int(stats.resends)}")

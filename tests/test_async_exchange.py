@@ -1,0 +1,303 @@
+"""Deferred (async) exchange: double-buffered delivery, overlap accounting.
+
+The asynchronous-mode contract under test (paper §III: relax/communicate
+without a per-round barrier; safety from the monotone idempotent
+scatter-min merge):
+
+  1. every deferred exchange (``async``/``async_bucket`` double-buffered
+     all-to-all, ``async_ppermute`` bidirectional ring streaming) reaches
+     a fixpoint BIT-IDENTICAL to the synchronous ``bucket`` exchange, for
+     staged and fused rounds, K in {1, 3} — only round counts differ
+  2. the property holds for ARBITRARY delivery lag (``async_lag`` >= 1)
+     and under every ToKa termination detector: in-flight payload sets
+     pending bits, so no detector declares quiescence over the wire
+  3. FaultPlan regimes compose with the lag: faults inject at DELIVERY
+     time, anti-entropy resends ride the pipe, and the run still heals to
+     the fault-free baseline
+  4. the stats tell the overlap story: deferred runs report
+     ``overlap_rounds``/``stale_merges``/``bytes_moved`` (sync runs pin
+     them at zero), and ``bytes_moved`` prices only the payload columns
+     that actually carried an improvement
+  5. the sim backend is a bit-level oracle of shmap: distances AND round
+     counts AND the new counters agree across backends (subprocess on a
+     spoofed 4-device mesh)
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+from _hyp import given, settings, strategies as st
+
+from repro.core import (FaultPlan, SsspConfig, build_shards, solve_sim_batch)
+from repro.graph import dijkstra_reference, random_graph
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+ASYNC_EXCHANGES = ("async", "async_bucket", "async_ppermute")
+TOKAS = ("toka0", "toka1", "toka2", "toka3")
+
+
+@pytest.fixture(scope="module")
+def fixture_graph():
+    g = random_graph(n=180, m=720, seed=3)
+    return g, build_shards(g, 4)
+
+
+def _baseline(sh, sources, **cfg_kw):
+    d, s = solve_sim_batch(sh, sources, SsspConfig(exchange="bucket", **cfg_kw))
+    return np.asarray(d), s
+
+
+# ------------------------------------------------ bit-identity matrix ----
+
+def test_async_bit_identity_matrix(fixture_graph):
+    """All three deferred exchanges x staged/fused x K in {1,3} solve to
+    the exact synchronous distances (and those match Dijkstra); deferred
+    runs take MORE rounds (the price of the lag) and report bytes."""
+    g, sh = fixture_graph
+    srcs = [0, 7, 11]
+    refs = np.stack([dijkstra_reference(g, s) for s in srcs])
+    for k in (1, 3):
+        for rnd in ("staged", "fused"):
+            base, sb = _baseline(sh, srcs[:k], round=rnd)
+            assert np.allclose(base, refs[:k], rtol=1e-5, atol=1e-4)
+            for ex in ASYNC_EXCHANGES:
+                d, s = solve_sim_batch(
+                    sh, srcs[:k], SsspConfig(round=rnd, exchange=ex))
+                assert np.array_equal(np.asarray(d), base), (k, rnd, ex)
+                assert int(s.rounds) > int(sb.rounds), (k, rnd, ex)
+                assert int(s.bytes_moved) > 0, (k, rnd, ex)
+
+
+# ------------------------------------------- lag + toka property test ----
+
+_PROP_CACHE = {}
+
+
+def _prop_graph():
+    # one graph/shards pair for every drawn example: the engine's
+    # compiled-round cache is keyed on the shards OBJECT, so rebuilding
+    # per example would recompile per example
+    if "gs" not in _PROP_CACHE:
+        g = random_graph(n=180, m=720, seed=3)
+        _PROP_CACHE["gs"] = (g, build_shards(g, 4))
+    return _PROP_CACHE["gs"]
+
+
+@settings(max_examples=8, deadline=None)
+@given(lag=st.integers(min_value=1, max_value=3),
+       toka_i=st.integers(min_value=0, max_value=3),
+       src=st.integers(min_value=0, max_value=179))
+def test_async_lag_reaches_sync_fixpoint(lag, toka_i, src):
+    """Property: an arbitrary ``lag``-round-delayed delivery schedule
+    reaches the SAME fixpoint as synchronous delivery under EVERY
+    termination detector — the monotone min merge is lag-independent, and
+    the in-flight pending bits keep every detector honest."""
+    g, sh = _prop_graph()
+    srcs = sorted({src, (src * 7 + 13) % g.n_vertices, 11})
+    toka = TOKAS[toka_i]
+    base, sb = _baseline(sh, srcs, toka=toka)
+    d, s = solve_sim_batch(
+        sh, srcs, SsspConfig(exchange="async", async_lag=lag, toka=toka))
+    assert np.array_equal(np.asarray(d), base), (lag, toka)
+    assert int(s.rounds) > int(sb.rounds), (lag, toka)
+
+
+def test_async_all_tokas_all_backends(fixture_graph):
+    """Every deferred exchange terminates correctly under every detector
+    (the non-property, full-matrix complement of the test above)."""
+    _, sh = fixture_graph
+    srcs = [0, 7]
+    for toka in TOKAS:
+        base, _ = _baseline(sh, srcs, toka=toka)
+        for ex in ASYNC_EXCHANGES:
+            d, _ = solve_sim_batch(
+                sh, srcs, SsspConfig(exchange=ex, toka=toka))
+            assert np.array_equal(np.asarray(d), base), (toka, ex)
+
+
+# ------------------------------------------------- faults compose ----
+
+def test_async_faults_heal_to_baseline(fixture_graph):
+    """FaultPlan injection at delivery time + anti-entropy resend compose
+    with the lag: drops/delays/dups/reorders on top of deferred delivery
+    still converge bit-identical to the fault-free synchronous solve."""
+    _, sh = fixture_graph
+    srcs = [0, 7]
+    base, _ = _baseline(sh, srcs)
+    plan = FaultPlan(drop=0.05, delay=0.1, duplicate=0.05, reorder=0.05,
+                     seed=9, resend_period=4)
+    for rnd in ("staged", "fused"):
+        for ex in ("async", "async_ppermute"):
+            cfg = SsspConfig(round=rnd, exchange=ex, toka="toka3",
+                             faults=plan)
+            d, s = solve_sim_batch(sh, srcs, cfg)
+            assert np.array_equal(np.asarray(d), base), (rnd, ex)
+            assert int(np.asarray(s.resends).sum()) > 0, (rnd, ex)
+
+
+# ------------------------------------------------- stats contract ----
+
+def test_async_stats_overlap_stale_bytes(fixture_graph):
+    """Sync exchanges pin the new counters at zero; deferred runs count
+    stale (late-delivered improving) merges and wire bytes. Overlap needs
+    off-phase work to exist: single-wave lag-1 double buffering alternates
+    compute and delivery rounds in the lock-step sim (overlap 0 is the
+    honest measurement), while ring streaming (``async_ppermute``) and
+    fault-delayed traffic genuinely coexist with the relax."""
+    _, sh = fixture_graph
+    srcs = [0, 7, 11]
+    _, s_sync = _baseline(sh, srcs)
+    assert int(s_sync.overlap_rounds) == 0
+    assert int(np.asarray(s_sync.stale_merges).sum()) == 0
+
+    _, s_async = solve_sim_batch(sh, srcs, SsspConfig(exchange="async"))
+    assert int(np.asarray(s_async.stale_merges).sum()) > 0
+    assert int(s_async.bytes_moved) > 0
+
+    _, s_ring = solve_sim_batch(
+        sh, srcs, SsspConfig(exchange="async_ppermute"))
+    assert int(s_ring.overlap_rounds) > 0
+
+    plan = FaultPlan(delay=0.3, seed=5)
+    _, s_fd = solve_sim_batch(
+        sh, srcs, SsspConfig(exchange="async", faults=plan))
+    assert int(s_fd.overlap_rounds) > 0
+
+
+def test_a2a_dense_bytes_priced_and_masked(fixture_graph):
+    """Satellite: the dense all-to-all no longer ships every column —
+    unimproved (query, destination) columns are masked to +inf before the
+    collective and ``bytes_moved`` prices only the used ones, so the dense
+    wire cost lands well under the worst case and the masked payload still
+    solves bit-identical."""
+    _, sh = fixture_graph
+    srcs = [0, 7]
+    base, _ = _baseline(sh, srcs)
+    d, s = solve_sim_batch(sh, srcs, SsspConfig(exchange="a2a_dense"))
+    assert np.array_equal(np.asarray(d), base)
+    worst = 4 * sh.block * len(srcs) * sh.n_parts * sh.n_parts \
+        * int(s.rounds)
+    assert 0 < int(s.bytes_moved) < worst
+
+
+# ------------------------------------------------- validation ----
+
+def test_async_config_validation():
+    with pytest.raises(ValueError, match="async_lag"):
+        SsspConfig(exchange="async", async_lag=0)
+    with pytest.raises(ValueError, match="async_lag"):
+        SsspConfig(exchange="bucket", async_lag=2)
+    with pytest.raises(ValueError, match="async_lag"):
+        SsspConfig(exchange="async_ppermute", async_lag=2)
+    SsspConfig(exchange="async_bucket", async_lag=3)  # valid
+
+
+# ------------------------------------------------- shmap parity ----
+
+_SHMAP_PROG = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import numpy as np
+    from repro import compat
+    from repro.core import (SsspConfig, build_shards, solve_shmap_batch,
+                            solve_sim_batch)
+    from repro.graph import random_graph
+
+    g = random_graph(n=180, m=720, seed=3)
+    sh = build_shards(g, 4)
+    mesh = compat.make_mesh((4,), ("d",))
+    srcs = [0, 7, 11]
+    for k in (1, 3):
+        for rnd in ("staged", "fused"):
+            db, _ = solve_shmap_batch(
+                sh, srcs[:k], SsspConfig(round=rnd), mesh, ("d",))
+            base = np.asarray(db)
+            for ex in ("async", "async_bucket", "async_ppermute"):
+                cfg = SsspConfig(round=rnd, exchange=ex)
+                d2, s2 = solve_shmap_batch(sh, srcs[:k], cfg, mesh, ("d",))
+                assert np.array_equal(np.asarray(d2), base), (k, rnd, ex)
+                ds, ss = solve_sim_batch(sh, srcs[:k], cfg)
+                assert np.array_equal(np.asarray(ds), np.asarray(d2))
+                for f in ("rounds", "q_rounds", "overlap_rounds",
+                          "bytes_moved", "msgs_sent", "msgs_recv"):
+                    a = np.asarray(getattr(s2, f))
+                    b = np.asarray(getattr(ss, f))
+                    assert (a == b).all(), (k, rnd, ex, f)
+                assert (np.asarray(s2.stale_merges)
+                        == np.asarray(ss.stale_merges)).all(), (k, rnd, ex)
+    print("ASYNC SHMAP PARITY OK")
+""")
+
+
+def test_async_shmap_matches_sim_bitwise():
+    """The sim is a bit-level oracle of the shmap deferred exchanges:
+    distances, round counts, and the overlap/stale/bytes counters agree
+    exactly on a spoofed 4-device mesh."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SHMAP_PROG], env=env,
+                         capture_output=True, text=True, timeout=1800)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "ASYNC SHMAP PARITY OK" in out.stdout
+
+
+# --------------------------------------- acceptance matrix (slow) ----
+
+_ACCEPT_PROG = textwrap.dedent("""
+    import numpy as np
+    from repro.core import (FaultPlan, SsspConfig, build_shards,
+                            solve_sim_batch)
+    from repro.graph import rmat_graph, road_grid_graph, dijkstra_reference
+
+    graphs = {
+        "graph1-like": rmat_graph(scale=10, edge_factor=2, seed=1),
+        "graph2-like": road_grid_graph(side=32, seed=2),
+        "graph3-like": rmat_graph(scale=8, edge_factor=16, seed=3),
+    }
+    plans = {
+        "clean": None,
+        "drop": FaultPlan(drop=0.2, seed=11, resend_period=4),
+        "delay": FaultPlan(delay=0.3, seed=12),
+    }
+    rng = np.random.default_rng(5)
+    for name, g in graphs.items():
+        srcs = sorted(int(s) for s in
+                      rng.choice(g.n_vertices, size=3, replace=False))
+        refs = np.stack([dijkstra_reference(g, s) for s in srcs])
+        sh = build_shards(g, 8, enumerate_triangles=False)
+        base, _ = solve_sim_batch(
+            sh, srcs, SsspConfig(exchange="bucket", prune_online=False))
+        base = np.asarray(base)
+        assert np.allclose(base, refs, 1e-5, 1e-4), name
+        for rnd in ("staged", "fused"):
+            for pname, plan in plans.items():
+                cfg = SsspConfig(round=rnd, exchange="async",
+                                 toka="toka3", prune_online=False,
+                                 faults=plan)
+                d, s = solve_sim_batch(sh, srcs, cfg)
+                assert np.array_equal(np.asarray(d), base), \\
+                    (name, rnd, pname)
+        cfgp = SsspConfig(exchange="async_ppermute", prune_online=False)
+        d, s = solve_sim_batch(sh, srcs, cfgp)
+        assert np.array_equal(np.asarray(d), base), (name, "ppermute")
+        assert int(s.overlap_rounds) > 0, (name, "ppermute")
+        print(f"{name} OK")
+    print("ASYNC MATRIX OK")
+""")
+
+
+@pytest.mark.slow
+def test_async_acceptance_matrix():
+    """Acceptance (nightly): async exchanges x staged/fused x FaultPlan
+    regimes solve bit-identical to the synchronous baseline on all three
+    bench-graph families at P=8."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run([sys.executable, "-c", _ACCEPT_PROG], env=env,
+                         capture_output=True, text=True, timeout=3000)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "ASYNC MATRIX OK" in out.stdout

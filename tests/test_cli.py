@@ -89,6 +89,34 @@ def test_result_cache_without_warm_start(capsys, monkeypatch):
     assert "cache_hits=2/2" in out
 
 
+# -------------------------------------------------------------- async ----
+
+def test_async_lag_flag_validation(monkeypatch, capsys):
+    for argv in ([*TINY, "--async-lag", "0", "--exchange", "async"],
+                 [*TINY, "--async-lag", "2"],  # sync exchange ignores lag
+                 [*TINY, "--async-lag", "2", "--exchange", "async_ppermute"]):
+        monkeypatch.setattr(sys, "argv", ["sssp_run", *argv])
+        with pytest.raises(SystemExit):
+            sssp_run.main()
+        assert "--async-lag" in capsys.readouterr().err
+
+
+def test_async_run_reports_overlap_and_validates(capsys, monkeypatch):
+    out = _run(capsys, monkeypatch, *TINY, "--sources", "0,5,9",
+               "--exchange", "async", "--validate")
+    assert "async: overlap=" in out
+    assert "stale_merges=" in out and "bytes_moved=" in out
+    assert "validation vs Dijkstra (3 queries): OK" in out
+
+
+def test_async_ppermute_lagged_run_validates(capsys, monkeypatch):
+    out = _run(capsys, monkeypatch, *TINY, "--source", "3",
+               "--exchange", "async_ppermute", "--round", "fused",
+               "--validate")
+    assert "async: overlap=" in out
+    assert "validation vs Dijkstra (1 query): OK" in out
+
+
 # ------------------------------------------------------------- faults ----
 
 def test_faulted_run_heals_and_validates(capsys, monkeypatch):

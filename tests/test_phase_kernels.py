@@ -263,7 +263,9 @@ def test_config_rejects_unknown_backends(field, bad):
 def test_registry_lists_backends():
     assert set(phases.backends("send")) == {"xla", "pallas"}
     assert set(phases.backends("merge")) == {"xla", "pallas"}
-    assert set(phases.backends("exchange")) == {"bucket", "pmin", "a2a_dense"}
+    assert set(phases.backends("exchange")) == {"bucket", "pmin", "a2a_dense",
+                                                "async", "async_bucket",
+                                                "async_ppermute"}
     assert set(phases.backends("local_solver")) == {"bellman", "delta",
                                                     "pallas"}
     assert set(phases.backends("round")) == {"staged", "fused"}
