@@ -10,15 +10,18 @@ road grid) scaled to CPU: the paper's *shape* (vertex/edge ratio) is kept.
 """
 from __future__ import annotations
 
+import re
 import time
 
 import jax
 import numpy as np
 
 from repro.core import (FaultPlan, SsspConfig, SsspEngine, build_shards,
-                        engine_for, sim_phase_fns, solve_sim, solve_sim_batch)
+                        build_shards_stream, engine_for, sim_phase_fns,
+                        solve_sim, solve_sim_batch)
 from repro.core import sssp as sssp_mod
-from repro.graph import rmat_graph, road_grid_graph, dijkstra_reference
+from repro.graph import (dijkstra_reference, preset_edge_stream, rmat_graph,
+                         road_grid_graph)
 
 BENCH_GRAPHS = {
     # name: builder — e/v ratios mimic graph1 (2.2), graph2 road (2.4, grid),
@@ -542,6 +545,131 @@ def bench_phase_breakdown(out):
         assert g1, f"pallas {phase} traced no pallas_call (fallback?)"
 
 
+def bench_scale(out, full=False):
+    """Million-edge scale: MTEPS + measured bytes-per-edge per workload
+    preset (the `scale` section of BENCH_sssp.json).
+
+    Every preset is STREAM-built into ragged CSR-chunked shards — the
+    memory path a 10M-edge graph must take. The 1e5 preset is additionally
+    batch-built dense and solved both ways with hard asserts: ragged
+    layout bytes strictly below dense, and distances bit-identical (the
+    acceptance gate for the ragged layout family). The 1e6 preset is
+    stream-built and measured (build time + bytes/edge) but solved only
+    at `full=True`; 1e7 is `full=True` only — interpret-mode kernels are
+    CPU-emulated, so its value is the LAYOUT numbers, not wall time."""
+    rng = np.random.default_rng(31)
+    # chunk size scales with the graph: EB rounding waste is ~EB/2 per
+    # occupied tile, so small presets need small chunks to stay near the
+    # CSR ideal while big ones amortize a larger (more kernel-friendly) EB
+    TILES = {"scale-1e5": 128, "scale-1e6": 256, "scale-1e7": 512}
+    for name in ("scale-1e5", "scale-1e6", "scale-1e7"):
+        if name != "scale-1e5" and not full:
+            if name == "scale-1e7":
+                continue
+        eb = TILES[name]
+        tiles = dict(relax_eb=eb, send_eb=eb, merge_eb=eb)
+        n, chunks = preset_edge_stream(name)
+        P = 8
+        t0 = time.perf_counter()
+        sh = build_shards_stream(chunks, n, P, **tiles)
+        t_build = time.perf_counter() - t0
+        lb = sh.layout_bytes()
+        out(f"scale[{name}][build]", t_build * 1e6,
+            f"edges={lb['n_edges']} bytes_per_edge={lb['bytes_per_edge']:.2f} "
+            f"ideal={lb['ideal_bytes_per_edge']:.1f} "
+            f"ragged_bytes={lb['total_bytes']} dense_bytes={lb['dense_bytes']}")
+        assert lb["total_bytes"] <= lb["dense_bytes"], (
+            f"{name}: ragged layout ({lb['total_bytes']} B) larger than the "
+            f"dense layout it replaces ({lb['dense_bytes']} B)")
+        assert lb["bytes_per_edge"] <= 1.5 * lb["ideal_bytes_per_edge"], (
+            f"{name}: measured {lb['bytes_per_edge']:.2f} B/edge exceeds "
+            f"1.5x the CSR ideal ({lb['ideal_bytes_per_edge']:.1f} B/edge) "
+            "— chunk rounding waste regressed")
+        if name == "scale-1e5":
+            # acceptance gate: dense twin must agree bit-for-bit, and the
+            # ragged layout must be strictly smaller on this skewed graph.
+            # The twin is materialized from the SAME stream (the streaming
+            # generator's counter-keyed RNG differs from rmat_graph's
+            # sequential draw, so preset_graph would be a different graph).
+            _, chunks2 = preset_edge_stream(name)
+            cs = list(chunks2)
+            from repro.graph.structure import csr_from_coo
+            g = csr_from_coo(np.concatenate([c[0] for c in cs]),
+                             np.concatenate([c[1] for c in cs]),
+                             np.concatenate([c[2] for c in cs]), n)
+            dense = build_shards(g, P, enumerate_triangles=False, **tiles)
+            dlb = dense.layout_bytes()
+            assert lb["total_bytes"] < dlb["total_bytes"], (
+                "ragged layout not smaller than dense on RMAT "
+                f"({lb['total_bytes']} vs {dlb['total_bytes']} B)")
+            sources = sorted(int(s) for s in
+                             rng.choice(np.unique(np.asarray(g.src)), size=4,
+                                        replace=False))
+            cfg = SsspConfig(prune_online=False, local_solver="pallas",
+                             send_backend="pallas", merge_backend="pallas")
+            d_r, s_r = solve_sim_batch(sh, sources, cfg)
+            d_d, s_d = solve_sim_batch(dense, sources, cfg)
+            assert np.array_equal(np.asarray(d_r), np.asarray(d_d)), \
+                "ragged solve lost bit-identity with dense"
+            ts = []
+            for _ in range(2):
+                t0 = time.perf_counter()
+                _, s_r = solve_sim_batch(sh, sources, cfg)
+                ts.append(time.perf_counter() - t0)
+            t = min(ts)
+            mteps = int(s_r.relaxations) / t / 1e6
+            out(f"scale[{name}][solve][K=4]", t * 1e6,
+                f"mteps={mteps:.4f} rounds={int(s_r.rounds)} "
+                f"ragged_vs_dense=bit-identical "
+                f"mem_ratio={lb['total_bytes'] / dlb['total_bytes']:.3f}")
+        elif full and name == "scale-1e6":
+            # 1e7 stays build-only even at full: interpret-mode kernels
+            # emulate every vector lane on CPU, so its solve measures the
+            # emulator, not the layout
+            source = int(np.asarray(sh.loc_src)[0, 0])
+            cfg = SsspConfig(prune_online=False)
+            t0 = time.perf_counter()
+            _, stats = solve_sim(sh, source, cfg)
+            t = time.perf_counter() - t0
+            mteps = int(stats.relaxations) / t / 1e6
+            out(f"scale[{name}][solve]", t * 1e6,
+                f"mteps={mteps:.4f} rounds={int(stats.rounds)}")
+
+
+# ------------------------------------------------------- regression gate ----
+
+def check_against(baseline_path, records):
+    """Compare this run's records against a committed baseline json.
+
+    Fails (returns a list of violation strings) when a record present in
+    BOTH runs regresses: MTEPS down more than 25%, or ANY increase in a
+    recompile counter (recompiles are a correctness property of the warm
+    paths — one is one too many). Records only one side has are ignored,
+    so adding or retiring sections never breaks the gate."""
+    import json as _json
+    with open(baseline_path) as f:
+        base = {r["name"]: r for r in _json.load(f)["benchmarks"]}
+    _RECOMP_RE = re.compile(r"recompiles=(\d+)")
+    violations = []
+    for rec in records:
+        b = base.get(rec["name"])
+        if b is None:
+            continue
+        if "mteps" in rec and "mteps" in b and b["mteps"] > 0:
+            ratio = rec["mteps"] / b["mteps"]
+            if ratio < 0.75:
+                violations.append(
+                    f"{rec['name']}: MTEPS {b['mteps']:.4f} -> "
+                    f"{rec['mteps']:.4f} ({ratio:.0%} of baseline, "
+                    "floor 75%)")
+        mb = _RECOMP_RE.search(b.get("derived", ""))
+        mr = _RECOMP_RE.search(rec.get("derived", ""))
+        if mb and mr and int(mr.group(1)) > int(mb.group(1)):
+            violations.append(
+                f"{rec['name']}: recompiles {mb.group(1)} -> {mr.group(1)}")
+    return violations
+
+
 def run_all(out):
     bench_scaling(out)
     bench_trishla(out)
@@ -554,6 +682,7 @@ def run_all(out):
     bench_faults(out)
     bench_async_scaling(out)
     bench_phase_breakdown(out)
+    bench_scale(out)
 
 
 # ---------------------------------------------------------------- smoke ----
@@ -609,19 +738,41 @@ def main(argv=None):
                    help="tiny CI profile (seconds): engine_serving + "
                         "warm_start sections with recompile/bit-identity "
                         "asserts")
+    p.add_argument("--scale", action="store_true",
+                   help="only the scale section (stream-built ragged "
+                        "workload presets: MTEPS + bytes-per-edge, with "
+                        "the 1e5 ragged-vs-dense bit-identity gate)")
+    p.add_argument("--scale-full", action="store_true",
+                   help="scale section including the 1e6 solve and the "
+                        "1e7 stream build (minutes; nightly profile)")
+    p.add_argument("--check-against", default=None, metavar="PATH",
+                   help="committed baseline json to gate this run against: "
+                        "fail on any shared record losing >25%% MTEPS or "
+                        "gaining recompiles")
     p.add_argument("--out", default=None,
                    help="output json (default: BENCH_sssp.json for the "
                         "full run; the gitignored BENCH_sssp.smoke.json "
-                        "for --smoke, so local smoke runs never dirty the "
-                        "tracked perf trajectory)")
+                        "for --smoke/--scale, so local smoke runs never "
+                        "dirty the tracked perf trajectory)")
     args = p.parse_args(argv)
-    from benchmarks.run import _out, _write_json
-    if args.smoke:
+    from benchmarks.run import _RECORDS, _out, _write_json
+    if args.scale or args.scale_full:
+        bench_scale(_out, full=args.scale_full)
+        _write_json(args.out or "BENCH_sssp.smoke.json")
+    elif args.smoke:
         run_smoke(_out)
         _write_json(args.out or "BENCH_sssp.smoke.json")
     else:
         run_all(_out)
         _write_json(args.out or "BENCH_sssp.json")
+    if args.check_against:
+        violations = check_against(args.check_against, _RECORDS)
+        if violations:
+            print("# PERF REGRESSION vs", args.check_against)
+            for v in violations:
+                print("#  ", v)
+            sys.exit(1)
+        print(f"# perf gate vs {args.check_against}: ok")
 
 
 if __name__ == "__main__":

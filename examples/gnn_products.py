@@ -2,13 +2,18 @@
 neighbor sampler (the minibatch_lg pattern at CPU scale).
 
     PYTHONPATH=src python examples/gnn_products.py
+
+Uses the REAL ogbn-products graph when a local extract exists under
+``data/ogbn_products/`` (see ``repro.graph.ogbn_products_graph`` for how to
+stage one — this container is offline and never downloads), otherwise a
+products-like R-MAT stand-in.
 """
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import MeshAxes
-from repro.graph import rmat_graph
+from repro.graph import ogbn_products_graph, rmat_graph
 from repro.graph.sampler import NeighborSampler
 from repro.launch.mesh import make_host_mesh
 from repro.models import gnn
@@ -18,8 +23,12 @@ from repro.optim.adamw import adamw_init
 
 
 def main():
-    # products-like graph at CPU scale
-    g = rmat_graph(scale=12, edge_factor=8, seed=0)
+    try:
+        g = ogbn_products_graph()
+        print(f"ogbn-products: {g.n_vertices} vertices, {g.n_edges} edges")
+    except FileNotFoundError:
+        # products-like graph at CPU scale
+        g = rmat_graph(scale=12, edge_factor=8, seed=0)
     n, d_feat, n_classes = g.n_vertices, 32, 16
     rng = np.random.default_rng(0)
     feats = rng.standard_normal((n, d_feat)).astype(np.float32)

@@ -7,7 +7,8 @@ from repro.core.sssp import (RoundPipeline, SsspConfig, SsspStats,
 from repro.core.engine import (QueryHandle, QueryResult, SsspEngine,
                                bucket_k, engine_for)
 from repro.core.faults import FaultPlan, FaultState, wrap_exchange
-from repro.core.shards import SsspShards, build_shards, shard_distance_rows
+from repro.core.shards import (SsspShards, build_shards, build_shards_stream,
+                               shard_distance_rows)
 from repro.core.warmstart import CachedRow, LandmarkCache, ResultCache
 from repro.core.partition import partition_1d, inter_edge_counts
 from repro.core import phases

@@ -39,7 +39,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import phases
-from repro.kernels.relax import relax_fixpoint_batch_pallas
+from repro.kernels.relax import (
+    relax_fixpoint_batch_pallas, relax_fixpoint_batch_ragged_pallas,
+)
 
 INF = jnp.float32(jnp.inf)
 
@@ -127,10 +129,18 @@ def local_fixpoint_pallas_batch(dist, active, pruned_loc, relax_layout, *,
     """Batched pallas fixpoint: dist/active are [K, block]; the dst-tiled
     layout AND the tiled Trishla mask are shared — gathered once, reused by
     every query in the batch (the amortization the batch engine exists for).
+
+    A 5-tuple ``relax_layout`` is the ragged CSR-chunked form (flat chunk
+    rows + chunk→tile map) and dispatches the ragged-grid kernel.
     """
-    src_t, w_t, dstrel_t, eid_t = relax_layout
-    n_vtiles, _, eb = src_t.shape
+    if len(relax_layout) == 5:
+        src_t, w_t, dstrel_t, eid_t, ctile = relax_layout
+    else:
+        src_t, w_t, dstrel_t, eid_t = relax_layout
+        ctile = None
+    eb = src_t.shape[-1]
     nq, block = dist.shape
+    n_vtiles = (src_t.shape[0] if ctile is None else max(-(-block // vb), 1))
     bp = n_vtiles * vb
     # pad to the kernel's tile-aligned block; padded slots never win a min
     dist_pad = jnp.full((nq, bp), INF).at[:, :block].set(dist)
@@ -147,9 +157,14 @@ def local_fixpoint_pallas_batch(dist, active, pruned_loc, relax_layout, *,
 
     def body(c):
         d, front, nrel, it = c
-        new_d, resid, n = relax_fixpoint_batch_pallas(
-            d, front, src_t, w_t, dstrel_t, pruned_t, vb=vb, eb=eb,
-            n_sweeps=sweeps, interpret=interpret)
+        if ctile is None:
+            new_d, resid, n = relax_fixpoint_batch_pallas(
+                d, front, src_t, w_t, dstrel_t, pruned_t, vb=vb, eb=eb,
+                n_sweeps=sweeps, interpret=interpret)
+        else:
+            new_d, resid, n = relax_fixpoint_batch_ragged_pallas(
+                d, front, ctile, src_t, w_t, dstrel_t, pruned_t, vb=vb,
+                eb=eb, n_sweeps=sweeps, interpret=interpret)
         return new_d, resid, nrel + n, it + jnp.int32(sweeps)
 
     out = jax.lax.while_loop(

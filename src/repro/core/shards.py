@@ -22,6 +22,25 @@ pattern): ``rx_*`` (local edges by vertex tile, for the relax kernel),
 ``tx_*`` (cut edges by message-slot tile + the ``tx_payload_slot`` payload
 inverse, for the send kernel), and ``mx_*`` (receive positions by vertex
 tile, for the merge kernel).
+
+Each layout family exists in two shapes, selected by ``layout=``:
+
+- ``"dense"``: ``[P, n_tiles, n_chunks, EB]`` with ``n_chunks`` the max
+  over tiles AND shards — every tile is padded to the worst case. Simple,
+  but on power-law graphs (where one vertex tile can carry orders of
+  magnitude more edges than the median) almost all of it is padding.
+- ``"ragged"``: CSR-chunked — flat ``[P, total_chunks, EB]`` chunk rows
+  plus a ``*_ctile [P, total_chunks]`` chunk→tile map consumed by the
+  ragged-grid kernels (scalar-prefetched). Memory is proportional to
+  ``sum_t ceil(count_t / EB)`` instead of ``n_tiles * max_t ceil(count_t
+  / EB)``; values are bit-identical (same stable sort, same chunk split,
+  minus inert padding). ``SsspShards.layout_bytes()`` reports both the
+  measured bytes and the CSR ideal / dense equivalent for either form.
+
+``build_shards`` materializes the full ``partition_1d`` intermediate —
+fine up to ~1M edges. ``build_shards_stream`` consumes an edge-chunk
+iterator with per-part accumulators instead, so a 10M-edge graph
+partitions without ever holding a ``[P, e_max]`` dense intermediate.
 """
 from __future__ import annotations
 
@@ -33,9 +52,9 @@ import numpy as np
 
 from repro.graph.structure import Graph
 from repro.core.partition import partition_1d
-from repro.kernels.merge import build_msg_tiled_layout
-from repro.kernels.relax import build_dst_tiled_layout
-from repro.kernels.send import build_slot_tiled_layout
+from repro.kernels.merge import build_msg_ragged_layout, build_msg_tiled_layout
+from repro.kernels.relax import build_dst_ragged_layout, build_dst_tiled_layout
+from repro.kernels.send import build_slot_ragged_layout, build_slot_tiled_layout
 
 
 def _pad2(rows, width, fill, dtype):
@@ -80,20 +99,25 @@ class SsspShards:
     # tiled slots are a permutation of [0, e_loc) plus padding; rx_eid maps
     # each slot back to its local edge id (sentinel = e_loc) so the runtime
     # Trishla pruned mask can be gathered into tiled order per solve.
-    rx_src: jax.Array | None = None     # [P, n_vtiles, n_chunks, EB] int32
-    rx_w: jax.Array | None = None       # [P, n_vtiles, n_chunks, EB] f32
-    rx_dstrel: jax.Array | None = None  # [P, n_vtiles, n_chunks, EB] int32
-    rx_eid: jax.Array | None = None     # [P, n_vtiles, n_chunks, EB] int32
+    # Dense layout: [P, n_vtiles, n_chunks, EB]. Ragged layout: flat
+    # [P, total_chunks, EB] chunk rows plus the rx_ctile chunk→tile map.
+    rx_src: jax.Array | None = None
+    rx_w: jax.Array | None = None
+    rx_dstrel: jax.Array | None = None
+    rx_eid: jax.Array | None = None
+    rx_ctile: jax.Array | None = None   # [P, total_chunks] int32 (ragged only;
+    #                                     sentinel n_vtiles = inert padding)
     rx_vb: int = dataclasses.field(default=128, metadata=dict(static=True))
     rx_eb: int = dataclasses.field(default=512, metadata=dict(static=True))
     # slot-tiled layout of the CUT edges for the Pallas send kernel (same
     # dst-tiled pattern with the message SLOT in the destination role;
     # None when comm_layout=False). tx_eid maps tiled slots back to cut
     # edge ids (sentinel = e_cut) for the runtime Trishla pruned gather.
-    tx_src: jax.Array | None = None     # [P, n_stiles, n_chunks, EB] int32
-    tx_w: jax.Array | None = None       # [P, n_stiles, n_chunks, EB] f32
-    tx_segrel: jax.Array | None = None  # [P, n_stiles, n_chunks, EB] int32
-    tx_eid: jax.Array | None = None     # [P, n_stiles, n_chunks, EB] int32
+    tx_src: jax.Array | None = None
+    tx_w: jax.Array | None = None
+    tx_segrel: jax.Array | None = None
+    tx_eid: jax.Array | None = None
+    tx_ctile: jax.Array | None = None   # [P, total_chunks] int32 (ragged only)
     # static inverse of (slot_owner, slot_pos): the slot feeding each
     # bucketed payload position, so the payload scatter becomes a gather
     tx_payload_slot: jax.Array | None = None  # [P, P, C] int32 (sentinel = S)
@@ -101,11 +125,15 @@ class SsspShards:
     tx_eb: int = dataclasses.field(default=512, metadata=dict(static=True))
     # msg-tiled receive routing for the Pallas merge kernel: flat incoming
     # positions [0, P*C) grouped by destination vertex tile
-    mx_pos: jax.Array | None = None     # [P, n_vtiles, n_chunks, EB] int32
-    mx_dstrel: jax.Array | None = None  # [P, n_vtiles, n_chunks, EB] int32
-    mx_valid: jax.Array | None = None   # [P, n_vtiles, n_chunks, EB] int32
+    mx_pos: jax.Array | None = None
+    mx_dstrel: jax.Array | None = None
+    mx_valid: jax.Array | None = None
+    mx_ctile: jax.Array | None = None   # [P, total_chunks] int32 (ragged only)
     mx_vb: int = dataclasses.field(default=128, metadata=dict(static=True))
     mx_eb: int = dataclasses.field(default=512, metadata=dict(static=True))
+    # which tile-layout family the rx/tx/mx arrays use ("dense" | "ragged")
+    layout: str = dataclasses.field(default="dense",
+                                    metadata=dict(static=True))
 
     @property
     def e_loc(self):
@@ -129,10 +157,13 @@ class SsspShards:
 
     @property
     def relax_layout(self):
-        """Per-call tuple consumed by ``local_fixpoint_batch`` (or None)."""
+        """Per-call tuple consumed by ``local_fixpoint_batch`` (or None).
+        Ragged shards append the chunk→tile map (5-tuple vs 4-tuple) —
+        consumers dispatch the ragged kernels on the arity."""
         if self.rx_src is None:
             return None
-        return (self.rx_src, self.rx_w, self.rx_dstrel, self.rx_eid)
+        base = (self.rx_src, self.rx_w, self.rx_dstrel, self.rx_eid)
+        return base if self.rx_ctile is None else base + (self.rx_ctile,)
 
     @property
     def has_send_layout(self):
@@ -140,10 +171,12 @@ class SsspShards:
 
     @property
     def send_layout(self):
-        """Per-call tuple consumed by the pallas send stage (or None)."""
+        """Per-call tuple consumed by the pallas send stage (or None);
+        5-tuple (with chunk→tile map) when ragged."""
         if self.tx_src is None:
             return None
-        return (self.tx_src, self.tx_w, self.tx_segrel, self.tx_eid)
+        base = (self.tx_src, self.tx_w, self.tx_segrel, self.tx_eid)
+        return base if self.tx_ctile is None else base + (self.tx_ctile,)
 
     @property
     def has_merge_layout(self):
@@ -151,10 +184,86 @@ class SsspShards:
 
     @property
     def merge_layout(self):
-        """Per-call tuple consumed by the pallas merge stage (or None)."""
+        """Per-call tuple consumed by the pallas merge stage (or None);
+        4-tuple (with chunk→tile map) when ragged."""
         if self.mx_pos is None:
             return None
-        return (self.mx_pos, self.mx_dstrel, self.mx_valid)
+        base = (self.mx_pos, self.mx_dstrel, self.mx_valid)
+        return base if self.mx_ctile is None else base + (self.mx_ctile,)
+
+    def layout_bytes(self):
+        """Measured memory of each tile-layout family vs the CSR ideal and
+        the dense-padded equivalent.
+
+        Per family: ``bytes`` (actual array storage), ``items`` (real
+        edges / messages it encodes), ``bytes_per_item``, ``ideal_bytes``
+        (CSR lower bound: 4 B per plane per item — 4 planes for the edge
+        layouts, 3 for the msg layout), and ``dense_bytes`` (what the
+        worst-case-padded dense layout costs for the same data; equals
+        ``bytes`` when the shards ARE dense). Top-level ``bytes_per_edge``
+        divides the edge layouts (relax + send) by real edge count — the
+        number the CI scale gate holds within 1.5x of the 16 B/edge ideal.
+        """
+        loc_edges = int(np.isfinite(np.asarray(self.loc_w)).sum())
+        cut_edges = int(np.isfinite(np.asarray(self.cut_w)).sum())
+        msgs = int((np.asarray(self.recv_idx) < self.block).sum())
+
+        def _bytes(arrays):
+            return int(sum(np.asarray(a).size * np.asarray(a).dtype.itemsize
+                           for a in arrays if a is not None))
+
+        def _dense_bytes(arrays, ctile, n_tiles, eb, planes):
+            """Dense equivalent: P * n_tiles * max-chunks-anywhere * EB."""
+            if arrays[0] is None:
+                return 0
+            if ctile is None:
+                return _bytes(arrays)                  # already dense
+            ct = np.asarray(ctile)
+            max_chunks = 1
+            for p in range(ct.shape[0]):
+                real = ct[p][ct[p] < n_tiles]
+                if real.size:
+                    per_tile = np.bincount(real, minlength=n_tiles)
+                    max_chunks = max(max_chunks, int(per_tile.max()))
+            P = ct.shape[0]
+            return int(P * n_tiles * max_chunks * eb * planes * 4)
+
+        n_vtiles = max(-(-self.block // self.rx_vb), 1)
+        n_stiles = max(-(-self.n_slots // self.tx_sb), 1)
+        n_mtiles = max(-(-self.block // self.mx_vb), 1)
+        groups = {}
+        for name, arrays, ctile, items, planes, n_tiles, eb in (
+            ("relax", (self.rx_src, self.rx_w, self.rx_dstrel, self.rx_eid,
+                       self.rx_ctile), self.rx_ctile, loc_edges, 4,
+             n_vtiles, self.rx_eb),
+            ("send", (self.tx_src, self.tx_w, self.tx_segrel, self.tx_eid,
+                      self.tx_ctile), self.tx_ctile, cut_edges, 4,
+             n_stiles, self.tx_eb),
+            ("merge", (self.mx_pos, self.mx_dstrel, self.mx_valid,
+                       self.mx_ctile), self.mx_ctile, msgs, 3,
+             n_mtiles, self.mx_eb),
+        ):
+            b = _bytes(arrays)
+            groups[name] = {
+                "bytes": b,
+                "items": items,
+                "bytes_per_item": b / max(items, 1),
+                "ideal_bytes": items * planes * 4,
+                "dense_bytes": _dense_bytes(arrays, ctile, n_tiles, eb,
+                                            planes),
+            }
+        edge_bytes = groups["relax"]["bytes"] + groups["send"]["bytes"]
+        n_edges = loc_edges + cut_edges
+        return {
+            "layout": self.layout,
+            "groups": groups,
+            "total_bytes": sum(g["bytes"] for g in groups.values()),
+            "dense_bytes": sum(g["dense_bytes"] for g in groups.values()),
+            "n_edges": n_edges,
+            "bytes_per_edge": edge_bytes / max(n_edges, 1),
+            "ideal_bytes_per_edge": 16.0,   # 4 planes x 4 B, each edge in
+            #                                 exactly one edge layout
+        }
 
 
 def shard_distance_rows(rows, n_parts: int, block: int) -> jax.Array:
@@ -173,27 +282,55 @@ def shard_distance_rows(rows, n_parts: int, block: int) -> jax.Array:
     return jnp.asarray(np.swapaxes(full.reshape(n_land, n_parts, block), 0, 1))
 
 
-def build_shards(g: Graph, n_parts: int, max_triangles_per_part: int | None = None,
-                 enumerate_triangles: bool = True, relax_layout: bool = True,
-                 relax_vb: int = 128, relax_eb: int = 512,
-                 comm_layout: bool = True, send_sb: int = 128,
-                 send_eb: int = 512, merge_vb: int = 128,
-                 merge_eb: int = 512) -> SsspShards:
-    # input hardening: a NaN weight propagates through every min it
-    # touches, and a negative weight breaks the monotonicity the whole
-    # async pipeline (and its termination proofs) rests on — both would
-    # otherwise surface only as silently wrong fixpoints. Padding edges
-    # legitimately carry +inf, so only the graph's valid edges are checked.
-    w_all = np.asarray(g.weight)
-    v_all = np.asarray(g.valid)
-    bad_nan = v_all & np.isnan(w_all)
-    bad_inf = v_all & ~np.isnan(w_all) & ~np.isfinite(w_all)
-    bad_neg = v_all & (w_all < 0)
+def _check_weights(w, valid):
+    """Raise on NaN / non-finite / negative weights among the valid edges.
+
+    A NaN weight propagates through every min it touches, and a negative
+    weight breaks the monotonicity the whole async pipeline (and its
+    termination proofs) rests on — both would otherwise surface only as
+    silently wrong fixpoints. Padding edges legitimately carry +inf, so
+    only the valid edges are checked."""
+    bad_nan = valid & np.isnan(w)
+    bad_inf = valid & ~np.isnan(w) & ~np.isfinite(w)
+    bad_neg = valid & (w < 0)
     if bad_nan.any() or bad_inf.any() or bad_neg.any():
         raise ValueError(
             f"invalid edge weights: {int(bad_nan.sum())} NaN, "
             f"{int(bad_inf.sum())} non-finite, {int(bad_neg.sum())} "
             "negative — SSSP requires finite non-negative weights")
+
+
+def _check_endpoints(src, dst, valid, n_vertices):
+    """Raise on out-of-range endpoints among the valid edges.
+
+    An out-of-range id would silently land in the wrong shard (owner =
+    id // block) or alias a padding slot — like a bad weight, it corrupts
+    the fixpoint instead of failing. Same counted-error style as the
+    weight check."""
+    bad_src = valid & ((src < 0) | (src >= n_vertices))
+    bad_dst = valid & ((dst < 0) | (dst >= n_vertices))
+    if bad_src.any() or bad_dst.any():
+        raise ValueError(
+            f"out-of-range edge endpoints: {int(bad_src.sum())} src, "
+            f"{int(bad_dst.sum())} dst — vertex ids must lie in "
+            f"[0, {n_vertices})")
+
+
+def build_shards(g: Graph, n_parts: int, max_triangles_per_part: int | None = None,
+                 enumerate_triangles: bool = True, relax_layout: bool = True,
+                 relax_vb: int = 128, relax_eb: int = 512,
+                 comm_layout: bool = True, send_sb: int = 128,
+                 send_eb: int = 512, merge_vb: int = 128,
+                 merge_eb: int = 512, layout: str = "dense") -> SsspShards:
+    """Partition + preprocess a materialized ``Graph`` (see module doc).
+
+    ``layout`` selects the tile-layout family for the rx/tx/mx arrays:
+    ``"dense"`` (worst-case padded) or ``"ragged"`` (CSR-chunked)."""
+    w_all = np.asarray(g.weight)
+    v_all = np.asarray(g.valid)
+    _check_weights(w_all, v_all)
+    _check_endpoints(np.asarray(g.src), np.asarray(g.dst), v_all,
+                     g.n_vertices)
     pg = partition_1d(g, n_parts)
     P, block, n = pg.n_parts, pg.block, pg.n_vertices
 
@@ -202,7 +339,109 @@ def build_shards(g: Graph, n_parts: int, max_triangles_per_part: int | None = No
     dst_l = np.asarray(pg.dst_local)
     w = np.asarray(pg.weight)
     valid = np.asarray(pg.valid)
-    is_cut = np.asarray(pg.is_cut)
+
+    parts = []
+    for p in range(P):
+        vm = valid[p]
+        parts.append((src_l[p][vm], dst_o[p][vm], dst_l[p][vm], w[p][vm]))
+    return _assemble_shards(
+        parts, n, P, block,
+        max_triangles_per_part=max_triangles_per_part,
+        enumerate_triangles=enumerate_triangles, relax_layout=relax_layout,
+        relax_vb=relax_vb, relax_eb=relax_eb, comm_layout=comm_layout,
+        send_sb=send_sb, send_eb=send_eb, merge_vb=merge_vb,
+        merge_eb=merge_eb, layout=layout)
+
+
+def build_shards_stream(edge_chunks, n_vertices: int, n_parts: int, *,
+                        dedup: bool = True,
+                        max_triangles_per_part: int | None = None,
+                        enumerate_triangles: bool = False,
+                        relax_layout: bool = True, relax_vb: int = 128,
+                        relax_eb: int = 512, comm_layout: bool = True,
+                        send_sb: int = 128, send_eb: int = 512,
+                        merge_vb: int = 128, merge_eb: int = 512,
+                        layout: str = "ragged") -> SsspShards:
+    """Streaming shard build: consume an iterator of ``(src, dst, w)``
+    edge chunks instead of a materialized ``Graph``.
+
+    Each chunk is validated (weights + endpoints, same errors as
+    ``build_shards``) and routed to its owner part (``src // block``)
+    immediately, so peak memory is one chunk plus the per-part
+    accumulators — never the global sorted edge list or the rectangular
+    ``[P, e_max]`` ``partition_1d`` intermediate a 10M-edge graph would
+    blow up on. Per part, edges are then (src, dst)-sorted and min-weight
+    deduped with EXACTLY the ``csr_from_coo`` recipe, so the resulting
+    shards are bit-identical to ``build_shards(csr_from_coo(...), ...)``
+    on the concatenated chunks.
+
+    ``enumerate_triangles`` defaults to False here (unlike ``build_shards``)
+    — Trishla's host-side triangle enumeration is superlinear and not meant
+    for the graph sizes this entry point exists for. ``layout`` defaults to
+    ``"ragged"`` for the same reason."""
+    block = max(-(-n_vertices // n_parts), 1)
+    acc_src = [[] for _ in range(n_parts)]
+    acc_dst = [[] for _ in range(n_parts)]
+    acc_w = [[] for _ in range(n_parts)]
+    for src, dst, w in edge_chunks:
+        src = np.asarray(src, np.int64)
+        dst = np.asarray(dst, np.int64)
+        w = np.asarray(w, np.float32)
+        ok = np.ones(len(src), bool)
+        _check_weights(w, ok)
+        _check_endpoints(src, dst, ok, n_vertices)
+        owner = src // block
+        for p in np.unique(owner):
+            m = owner == p
+            acc_src[p].append(src[m])
+            acc_dst[p].append(dst[m])
+            acc_w[p].append(w[m])
+
+    parts = []
+    for p in range(n_parts):
+        if acc_src[p]:
+            src = np.concatenate(acc_src[p])
+            dst = np.concatenate(acc_dst[p])
+            w = np.concatenate(acc_w[p]).astype(np.float32)
+        else:
+            src = np.zeros(0, np.int64)
+            dst = np.zeros(0, np.int64)
+            w = np.zeros(0, np.float32)
+        acc_src[p] = acc_dst[p] = acc_w[p] = None     # free as we go
+        # mirror csr_from_coo exactly: (src, dst) sort, then min-weight
+        # dedup by (key, weight) sort + keep-first — bit-identity with the
+        # batch path depends on reproducing this ordering verbatim
+        order = np.lexsort((dst, src))
+        src, dst, w = src[order], dst[order], w[order]
+        if dedup and len(src):
+            key = src * n_vertices + dst
+            o2 = np.lexsort((w, key))
+            key, src, dst, w = key[o2], src[o2], dst[o2], w[o2]
+            keep = np.ones(len(key), bool)
+            keep[1:] = key[1:] != key[:-1]
+            src, dst, w = src[keep], dst[keep], w[keep]
+        dst_o = dst // block
+        parts.append((src - p * block, dst_o, dst - dst_o * block, w))
+    return _assemble_shards(
+        parts, n_vertices, n_parts, block,
+        max_triangles_per_part=max_triangles_per_part,
+        enumerate_triangles=enumerate_triangles, relax_layout=relax_layout,
+        relax_vb=relax_vb, relax_eb=relax_eb, comm_layout=comm_layout,
+        send_sb=send_sb, send_eb=send_eb, merge_vb=merge_vb,
+        merge_eb=merge_eb, layout=layout)
+
+
+def _assemble_shards(parts, n, P, block, *, max_triangles_per_part,
+                     enumerate_triangles, relax_layout, relax_vb, relax_eb,
+                     comm_layout, send_sb, send_eb, merge_vb, merge_eb,
+                     layout) -> SsspShards:
+    """Shared assembly: per-part valid edges -> SsspShards.
+
+    ``parts[p]`` = (src_local, dst_owner, dst_local, w), each the part's
+    VALID edges in (src, dst)-sorted order (both builders guarantee it)."""
+    if layout not in ("dense", "ragged"):
+        raise ValueError(f"unknown layout {layout!r}: expected 'dense' or "
+                         "'ragged'")
 
     loc_rows_src, loc_rows_dst, loc_rows_w = [], [], []
     cut_rows_src, cut_rows_w, cut_rows_seg = [], [], []
@@ -210,13 +449,14 @@ def build_shards(g: Graph, n_parts: int, max_triangles_per_part: int | None = No
     inter_edges = np.zeros(P, np.int64)
 
     for p in range(P):
-        lm = valid[p] & ~is_cut[p]
-        cm = valid[p] & is_cut[p]
-        loc_rows_src.append(src_l[p][lm])
-        loc_rows_dst.append(dst_l[p][lm])
-        loc_rows_w.append(w[p][lm])
+        p_src, p_do, p_dl, p_w = parts[p]
+        cm = p_do != p
+        lm = ~cm
+        loc_rows_src.append(p_src[lm])
+        loc_rows_dst.append(p_dl[lm])
+        loc_rows_w.append(p_w[lm])
         # group cut edges by (owner, dst_local)
-        co, cl, cs, cw = dst_o[p][cm], dst_l[p][cm], src_l[p][cm], w[p][cm]
+        co, cl, cs, cw = p_do[cm], p_dl[cm], p_src[cm], p_w[cm]
         order = np.lexsort((cl, co))
         co, cl, cs, cw = co[order], cl[order], cs[order], cw[order]
         key = co.astype(np.int64) * block + cl
@@ -328,7 +568,43 @@ def build_shards(g: Graph, n_parts: int, max_triangles_per_part: int | None = No
     # stack into one [P, n_vtiles, n_chunks, EB] array for the sim backend
     # (the shard_map backend slices its own shard back out).
     rx = dict(rx_src=None, rx_w=None, rx_dstrel=None, rx_eid=None)
-    if relax_layout:
+    if relax_layout and layout == "ragged":
+        # CSR-chunked: each shard keeps only its own ceil(count_t/eb) chunks
+        # per tile, flattened to [total_chunks, EB] with a chunk->tile map.
+        # Shards stack to [P, total_chunks_max, EB]; padding chunks are
+        # inert (w=+inf) and carry the ctile sentinel n_vtiles.
+        per_shard = []
+        for p in range(P):
+            src_r, w_r, dr_r, eid_r, ct_r, block_pad = build_dst_ragged_layout(
+                loc_rows_src[p], loc_rows_dst[p], loc_rows_w[p], block,
+                vb=relax_vb, eb=relax_eb, with_eid=True)
+            per_shard.append((np.asarray(src_r), np.asarray(w_r),
+                              np.asarray(dr_r), np.asarray(eid_r),
+                              np.asarray(ct_r)))
+        n_vtiles = block_pad // relax_vb
+        tc = max(lay[0].shape[0] for lay in per_shard)
+        rx_src = np.full((P, tc, relax_eb), block_pad - 1, np.int64)
+        rx_w = np.full((P, tc, relax_eb), np.inf, np.float32)
+        rx_dstrel = np.zeros((P, tc, relax_eb), np.int64)
+        rx_eid = np.full((P, tc, relax_eb), e_loc, np.int64)
+        rx_ctile = np.full((P, tc), n_vtiles, np.int64)
+        for p, (src_r, w_r, dr_r, eid_r, ct_r) in enumerate(per_shard):
+            nc = src_r.shape[0]
+            rx_src[p, :nc] = src_r
+            rx_w[p, :nc] = w_r
+            rx_dstrel[p, :nc] = dr_r
+            # builder sentinel is the shard's own edge count; restamp to the
+            # padded-row sentinel e_loc so the runtime gather is uniform
+            eid = eid_r.astype(np.int64)
+            eid[eid == len(loc_rows_src[p])] = e_loc
+            rx_eid[p, :nc] = eid
+            rx_ctile[p, :nc] = ct_r
+        rx = dict(rx_src=jnp.asarray(rx_src, jnp.int32),
+                  rx_w=jnp.asarray(rx_w, jnp.float32),
+                  rx_dstrel=jnp.asarray(rx_dstrel, jnp.int32),
+                  rx_eid=jnp.asarray(rx_eid, jnp.int32),
+                  rx_ctile=jnp.asarray(rx_ctile, jnp.int32))
+    elif relax_layout:
         per_shard = []
         for p in range(P):
             src_t, w_t, dr_t, eid_t, _bp = build_dst_tiled_layout(
@@ -366,7 +642,65 @@ def build_shards(g: Graph, n_parts: int, max_triangles_per_part: int | None = No
     comm = dict(tx_src=None, tx_w=None, tx_segrel=None, tx_eid=None,
                 tx_payload_slot=None, mx_pos=None, mx_dstrel=None,
                 mx_valid=None)
-    if comm_layout:
+    if comm_layout and layout == "ragged":
+        per_shard = []
+        for p in range(P):
+            src_r, w_r, seg_r, eid_r, ct_r, S_pad = build_slot_ragged_layout(
+                cut_rows_src[p], cut_rows_seg[p], cut_rows_w[p], S,
+                sb=send_sb, eb=send_eb)
+            per_shard.append((np.asarray(src_r), np.asarray(w_r),
+                              np.asarray(seg_r), np.asarray(eid_r),
+                              np.asarray(ct_r)))
+        n_stiles = S_pad // send_sb
+        tc = max(lay[0].shape[0] for lay in per_shard)
+        tx_src = np.zeros((P, tc, send_eb), np.int64)
+        tx_w = np.full((P, tc, send_eb), np.inf, np.float32)
+        tx_segrel = np.zeros((P, tc, send_eb), np.int64)
+        tx_eid = np.full((P, tc, send_eb), e_cut, np.int64)
+        tx_ctile = np.full((P, tc), n_stiles, np.int64)
+        for p, (src_r, w_r, seg_r, eid_r, ct_r) in enumerate(per_shard):
+            nc = src_r.shape[0]
+            tx_src[p, :nc] = src_r
+            tx_w[p, :nc] = w_r
+            tx_segrel[p, :nc] = seg_r
+            # builder sentinel is the shard's own cut count; restamp to the
+            # padded-row sentinel e_cut so the runtime gather is uniform
+            eid = eid_r.astype(np.int64)
+            eid[eid == len(cut_rows_src[p])] = e_cut
+            tx_eid[p, :nc] = eid
+            tx_ctile[p, :nc] = ct_r
+
+        tx_payload_slot = np.full((P, P, C), S, np.int64)
+        for p in range(P):
+            owners, pos = slot_rows_owner[p], slot_pos_rows[p]
+            tx_payload_slot[p, owners, pos] = np.arange(len(owners))
+
+        mx_shards = [build_msg_ragged_layout(recv_idx[q], block, vb=merge_vb,
+                                             eb=merge_eb) for q in range(P)]
+        n_mtiles = mx_shards[0][4] // merge_vb
+        mc = max(np.asarray(lay[0]).shape[0] for lay in mx_shards)
+        mx_pos = np.zeros((P, mc, merge_eb), np.int64)
+        mx_dstrel = np.zeros((P, mc, merge_eb), np.int64)
+        mx_valid = np.zeros((P, mc, merge_eb), np.int64)
+        mx_ctile = np.full((P, mc), n_mtiles, np.int64)
+        for q, (pos_r, dr_r, v_r, ct_r, _bp) in enumerate(mx_shards):
+            nc = np.asarray(pos_r).shape[0]
+            mx_pos[q, :nc] = np.asarray(pos_r)
+            mx_dstrel[q, :nc] = np.asarray(dr_r)
+            mx_valid[q, :nc] = np.asarray(v_r)
+            mx_ctile[q, :nc] = np.asarray(ct_r)
+
+        comm = dict(tx_src=jnp.asarray(tx_src, jnp.int32),
+                    tx_w=jnp.asarray(tx_w, jnp.float32),
+                    tx_segrel=jnp.asarray(tx_segrel, jnp.int32),
+                    tx_eid=jnp.asarray(tx_eid, jnp.int32),
+                    tx_payload_slot=jnp.asarray(tx_payload_slot, jnp.int32),
+                    tx_ctile=jnp.asarray(tx_ctile, jnp.int32),
+                    mx_pos=jnp.asarray(mx_pos, jnp.int32),
+                    mx_dstrel=jnp.asarray(mx_dstrel, jnp.int32),
+                    mx_valid=jnp.asarray(mx_valid, jnp.int32),
+                    mx_ctile=jnp.asarray(mx_ctile, jnp.int32))
+    elif comm_layout:
         per_shard = []
         for p in range(P):
             src_t, w_t, seg_t, eid_t, _sp = build_slot_tiled_layout(
@@ -441,6 +775,7 @@ def build_shards(g: Graph, n_parts: int, max_triangles_per_part: int | None = No
         n_vertices=n,
         n_parts=P,
         block=block,
+        layout=layout,
         rx_vb=relax_vb,
         rx_eb=relax_eb,
         tx_sb=send_sb,

@@ -273,12 +273,18 @@ def _phase_send_pallas(shard: SsspShards, dist, pruned, last_sent, *,
     bucketed payload scatter becomes a static gather (``tx_payload_slot``).
     Bit-identical to the XLA backend (min is exact; same per-edge sums)."""
     e_loc = shard.loc_src.shape[0]
-    src_t, w_t, segrel_t, eid_t = shard.send_layout
+    lay = shard.send_layout
+    if len(lay) == 5:                       # ragged: + chunk→tile map
+        src_t, w_t, segrel_t, eid_t, ctile = lay
+    else:
+        src_t, w_t, segrel_t, eid_t = lay
+        ctile = None
     pruned_t = jnp.take(pruned[e_loc:].astype(jnp.int32), eid_t,
                         mode="fill", fill_value=0)
     send_val, new_last, sends = send_pack_pallas(
         dist, last_sent, shard.slot_valid, src_t, w_t, segrel_t, pruned_t,
-        sb=shard.tx_sb, eb=shard.tx_eb, interpret=cfg.pallas_interpret)
+        ctile, sb=shard.tx_sb, eb=shard.tx_eb,
+        interpret=cfg.pallas_interpret)
     if dense:
         payload = _scatter_dense(shard, send_val, dist.shape[1])
     else:
@@ -323,9 +329,14 @@ def _phase_merge_pallas(shard: SsspShards, dist, incoming, *, dense: bool,
     if dense:
         return _merge_dense(dist, incoming)
     nq = dist.shape[0]
-    mx_pos, mx_dstrel, mx_valid = shard.merge_layout
+    lay = shard.merge_layout
+    if len(lay) == 4:                       # ragged: + chunk→tile map
+        mx_pos, mx_dstrel, mx_valid, ctile = lay
+    else:
+        mx_pos, mx_dstrel, mx_valid = lay
+        ctile = None
     return merge_scatter_pallas(
-        dist, incoming.reshape(nq, -1), mx_pos, mx_dstrel, mx_valid,
+        dist, incoming.reshape(nq, -1), mx_pos, mx_dstrel, mx_valid, ctile,
         vb=shard.mx_vb, eb=shard.mx_eb, interpret=cfg.pallas_interpret)
 
 

@@ -1,3 +1,8 @@
 from repro.graph.structure import Graph, PartitionedGraph, csr_from_coo
-from repro.graph.generators import rmat_graph, road_grid_graph, random_graph, assign_weights
+from repro.graph.generators import (GENERATORS, SCALE_PRESETS, assign_weights,
+                                    edge_chunks_of, get_generator,
+                                    ogbn_products_graph, preset_edge_stream,
+                                    preset_graph, random_graph,
+                                    register_generator, rmat_edge_stream,
+                                    rmat_graph, road_grid_graph)
 from repro.graph.reference import dijkstra_reference, bellman_ford_reference

@@ -105,6 +105,148 @@ def random_graph(n: int, m: int, seed: int = 0, undirected: bool = True,
     return csr_from_coo(src, dst, w, n, e_pad=e_pad)
 
 
+# ---- generator registry + Graph500-style scale presets --------------------
+# Benchmarks and the CI scale gate refer to workloads by name; registering a
+# generator here makes it addressable from ``--graph name`` style CLIs without
+# the caller importing the module that defines it.
+
+GENERATORS: dict[str, object] = {}
+
+
+def register_generator(name: str):
+    """Decorator: register ``fn(**kwargs) -> Graph`` under ``name``."""
+    def deco(fn):
+        GENERATORS[name] = fn
+        return fn
+    return deco
+
+
+def get_generator(name: str):
+    if name not in GENERATORS:
+        raise KeyError(f"unknown generator {name!r}: have "
+                       f"{sorted(GENERATORS)}")
+    return GENERATORS[name]
+
+
+register_generator("rmat")(rmat_graph)
+register_generator("road_grid")(road_grid_graph)
+register_generator("random")(random_graph)
+
+# Graph500-flavoured presets: (generator, kwargs) pairs sized by DIRECTED
+# edge count after undirected doubling (~1e5 / 1e6 / 1e7). The scale gate
+# in CI runs "scale-1e5"; the nightly bench can take the larger two.
+SCALE_PRESETS = {
+    "scale-1e5": ("rmat", dict(scale=13, edge_factor=8, seed=500)),
+    "scale-1e6": ("rmat", dict(scale=16, edge_factor=8, seed=600)),
+    "scale-1e7": ("rmat", dict(scale=19, edge_factor=10, seed=700)),
+}
+
+
+def preset_graph(name: str, **overrides) -> Graph:
+    """Materialize a ``SCALE_PRESETS`` workload (small/medium only — for
+    1e7+ prefer ``preset_edge_stream`` + ``build_shards_stream``)."""
+    gen, kw = SCALE_PRESETS[name]
+    return get_generator(gen)(**{**kw, **overrides})
+
+
+def rmat_edge_stream(scale: int, edge_factor: int = 16, seed: int = 0,
+                     a: float = 0.57, b: float = 0.19, c: float = 0.19,
+                     undirected: bool = True, chunk_edges: int = 1 << 18):
+    """R-MAT as an iterator of ``(src, dst, w)`` chunks — the streaming twin
+    of ``rmat_graph`` for graphs too large to materialize as one COO block.
+
+    R-MAT edges are iid given the quadrant probabilities, so each chunk is
+    drawn from its own counter-keyed RNG stream: the edge SET depends only on
+    (seed, chunk_edges), never on how far the consumer iterated. The vertex
+    permutation is drawn up front from the seed (O(n) memory — the same
+    budget any partitioner needs for the per-vertex distance array).
+    """
+    n = 1 << scale
+    m = n * edge_factor
+    perm = np.random.default_rng((seed, 0)).permutation(n)
+    for start in range(0, m, chunk_edges):
+        cm = min(chunk_edges, m - start)
+        rng = np.random.default_rng((seed, 1 + start // chunk_edges))
+        src = np.zeros(cm, np.int64)
+        dst = np.zeros(cm, np.int64)
+        for level in range(scale):
+            r = rng.random(cm)
+            go_right = (r >= a) & (r < a + b) | (r >= a + b + c)
+            go_down = r >= a + b
+            src |= (go_down.astype(np.int64) << (scale - 1 - level))
+            dst |= (go_right.astype(np.int64) << (scale - 1 - level))
+        src, dst = perm[src], perm[dst]
+        keep = src != dst
+        src, dst = src[keep], dst[keep]
+        w = assign_weights(len(src), rng)
+        if undirected:
+            src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+            w = np.concatenate([w, w])
+        if len(src):
+            yield src, dst, w
+
+
+def preset_edge_stream(name: str, chunk_edges: int = 1 << 18):
+    """Streaming form of a ``SCALE_PRESETS`` workload. Returns
+    ``(n_vertices, iterator_of_chunks)``."""
+    gen, kw = SCALE_PRESETS[name]
+    if gen != "rmat":
+        raise ValueError(f"preset {name!r} uses generator {gen!r}, which has "
+                         "no streaming form")
+    return 1 << kw["scale"], rmat_edge_stream(chunk_edges=chunk_edges, **kw)
+
+
+def edge_chunks_of(g: Graph, chunk_edges: int = 1 << 18):
+    """Chunk iterator over a materialized Graph's valid edges — lets the
+    streaming builder be exercised (and tested) against batch inputs."""
+    v = np.asarray(g.valid)
+    src, dst = np.asarray(g.src)[v], np.asarray(g.dst)[v]
+    w = np.asarray(g.weight)[v]
+    for i in range(0, len(src), chunk_edges):
+        yield src[i:i + chunk_edges], dst[i:i + chunk_edges], w[i:i + chunk_edges]
+
+
+def ogbn_products_graph(root: str = "data/ogbn_products",
+                        e_pad: int | None = None) -> Graph:
+    """Load ogbn-products (2.4M vertices, 123M edges) from a local extract.
+
+    Expects ``<root>/edge.npy`` (or ``edge_index.npy``) holding an int
+    ``[2, E]`` (or ``[E, 2]``) edge index — the format produced by exporting
+    ``ogb.nodeproppred.NodePropPredDataset('ogbn-products')``'s graph dict.
+    No network access is attempted: this container is offline, so a missing
+    file raises with download instructions instead of fetching.
+
+    Edges get U[1, 20) weights (the dataset is unweighted; the paper's
+    weight model, see ``assign_weights``) and are symmetrized by
+    ``csr_from_coo`` dedup.
+    """
+    import os
+    cand = [os.path.join(root, "edge.npy"),
+            os.path.join(root, "edge_index.npy")]
+    path = next((p for p in cand if os.path.exists(p)), None)
+    if path is None:
+        raise FileNotFoundError(
+            f"ogbn-products edge index not found (looked for {cand}). "
+            "On a machine with network access run:\n"
+            "  python -c \"from ogb.nodeproppred import NodePropPredDataset; "
+            "import numpy as np; d = NodePropPredDataset('ogbn-products'); "
+            "np.save('edge.npy', d[0][0]['edge_index'])\"\n"
+            f"and place edge.npy under {root}/")
+    ei = np.load(path, mmap_mode="r")
+    if ei.shape[0] != 2:
+        ei = ei.T
+    src = np.asarray(ei[0], np.int64)
+    dst = np.asarray(ei[1], np.int64)
+    n = int(max(src.max(), dst.max())) + 1
+    w = assign_weights(len(src), np.random.default_rng(0))
+    src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+    w = np.concatenate([w, w])
+    return csr_from_coo(src, dst, w, n, e_pad=e_pad)
+
+
+register_generator("ogbn-products")(ogbn_products_graph)
+
+
 # ---- paper graph descriptors (full-scale; used by the dry-run only) -------
 
 PAPER_GRAPHS = {

@@ -1,2 +1,4 @@
-from repro.kernels.merge.ops import build_msg_tiled_layout, merge_scatter_pallas
+from repro.kernels.merge.ops import (
+    build_msg_ragged_layout, build_msg_tiled_layout, merge_scatter_pallas,
+)
 from repro.kernels.merge.ref import merge_scatter_ref

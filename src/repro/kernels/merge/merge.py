@@ -122,3 +122,83 @@ def merge_scatter_tiled(dist_pad, incoming_flat, pos_t, dstrel_t, valid_t, *,
         scratch_shapes=[pltpu.SMEM((nq,), jnp.int32)],
         interpret=interpret,
     )(dist_pad, incoming_flat, pos_t, dstrel_t, valid_t)
+
+
+def _merge_scatter_ragged_kernel(ctile_ref, dist_ref, in_ref, pos_ref,
+                                 dstrel_ref, valid_ref, out_ref, front_ref,
+                                 recv_ref, count_ref, *, vb: int,
+                                 n_vtiles: int, total_chunks: int,
+                                 n_queries: int):
+    """Ragged grid ``(total_chunks,)`` with the scalar-prefetched chunk→tile
+    map. Tile init/finalize move to GLOBAL (whole [K, block_pad] at the
+    first/last chunk): the accumulate never reads the frontier plane, so the
+    result is bit-identical, and zero-chunk tiles — skipped by the ragged
+    grid entirely — still get ``out = dist`` / frontier 0."""
+    c = pl.program_id(0)
+    t = jnp.minimum(ctile_ref[c], n_vtiles - 1)
+    tile = pl.dslice(t * vb, vb)
+
+    @pl.when(c == 0)
+    def _init():
+        out_ref[...] = dist_ref[...]
+        for k in range(n_queries):
+            count_ref[k] = 0
+
+    pos = pos_ref[0, :]                       # [EB] int32 (padding = 0)
+    dstrel = dstrel_ref[0, :]                 # [EB] int32 in [0, vb)
+    valid = valid_ref[0, :] > 0               # [EB]
+    v = jnp.take(in_ref[...], pos, axis=1)    # [K, EB]
+    cand = jnp.where(valid[None, :], v, INF)
+    sums = jnp.sum(valid[None, :] & (v < INF), axis=1).astype(jnp.int32)
+    for k in range(n_queries):
+        count_ref[k] = count_ref[k] + sums[k]
+    mins = tile_min_batch(cand, dstrel, width=vb)     # [K, vb]
+    out_ref[:, tile] = jnp.minimum(out_ref[:, tile], mins)
+
+    @pl.when(c == total_chunks - 1)
+    def _fin():
+        front_ref[...] = (out_ref[...] < dist_ref[...]).astype(jnp.float32)
+        for k in range(n_queries):
+            recv_ref[k] = count_ref[k]
+
+
+def merge_scatter_ragged(dist_pad, incoming_flat, ctile, pos_r, dstrel_r,
+                         valid_r, *, vb: int, eb: int,
+                         interpret: bool = True):
+    """Ragged counterpart of ``merge_scatter_tiled``: pos_r/dstrel_r/valid_r
+    are flat [total_chunks, EB] rows, ``ctile`` the [total_chunks] chunk→
+    tile map (sentinel ``n_vtiles`` for inert padding chunks). Same
+    returns."""
+    total_chunks, eb_l = pos_r.shape
+    nq, bp = dist_pad.shape
+    assert eb_l == eb and bp % vb == 0
+    n_vtiles = bp // vb
+
+    grid = (total_chunks,)
+    dist_spec = pl.BlockSpec((nq, bp), lambda c, ctile: (0, 0))
+    in_spec = pl.BlockSpec(incoming_flat.shape, lambda c, ctile: (0, 0))
+    pos_spec = pl.BlockSpec((1, eb), lambda c, ctile: (c, 0))
+    kernel = functools.partial(_merge_scatter_ragged_kernel, vb=vb,
+                               n_vtiles=n_vtiles, total_chunks=total_chunks,
+                               n_queries=nq)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[dist_spec, in_spec, pos_spec, pos_spec, pos_spec],
+        out_specs=[
+            dist_spec,                                     # merged distances
+            dist_spec,                                     # new frontier
+            pl.BlockSpec((nq,), lambda c, ctile: (0,)),
+        ],
+        scratch_shapes=[pltpu.SMEM((nq,), jnp.int32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, bp), dist_pad.dtype),
+            jax.ShapeDtypeStruct((nq, bp), jnp.float32),
+            jax.ShapeDtypeStruct((nq,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ctile, dist_pad, incoming_flat, pos_r, dstrel_r, valid_r)

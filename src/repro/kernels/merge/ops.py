@@ -7,9 +7,55 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.merge.merge import merge_scatter_tiled
+from repro.kernels.merge.merge import merge_scatter_ragged, merge_scatter_tiled
 
 INF = float("inf")
+
+
+def build_msg_ragged_layout(recv_idx, block: int, *, vb: int = 128,
+                            eb: int = 512):
+    """Ragged (CSR-chunked) msg routing layout: the static receive table ->
+    flat [total_chunks, EB] position rows + [total_chunks] chunk→tile map
+    (sentinel ``n_vtiles`` for inert padding chunks; their valid plane is
+    0). Same stable sort and per-tile EB split as the dense builder.
+
+    Returns (pos_r, dstrel_r, valid_r, ctile, block_pad)."""
+    ridx = np.asarray(recv_idx, np.int64).reshape(-1)
+    pos = np.arange(ridx.shape[0], dtype=np.int64)
+    keep = ridx < block
+    ridx, pos = ridx[keep], pos[keep]
+
+    n_vtiles = max(-(-block // vb), 1)
+    block_pad = n_vtiles * vb
+    order = np.argsort(ridx, kind="stable")
+    ridx, pos = ridx[order], pos[order]
+    tile_of = ridx // vb
+    counts = np.bincount(tile_of, minlength=n_vtiles)
+    chunks_per_tile = -(-counts // eb)
+    total_chunks = max(int(chunks_per_tile.sum()), 1)
+
+    pos_r = np.zeros((total_chunks, eb), np.int64)
+    dstrel_r = np.zeros((total_chunks, eb), np.int64)
+    valid_r = np.zeros((total_chunks, eb), np.int64)
+    ctile = np.full(total_chunks, n_vtiles, np.int64)
+    starts = np.zeros(n_vtiles + 1, np.int64)
+    starts[1:] = np.cumsum(counts)
+    row = 0
+    for t in range(n_vtiles):
+        lo, hi = starts[t], starts[t + 1]
+        for off in range(lo, hi, eb):
+            k = min(eb, hi - off)
+            pos_r[row, :k] = pos[off:off + k]
+            dstrel_r[row, :k] = ridx[off:off + k] - t * vb
+            valid_r[row, :k] = 1
+            ctile[row] = t
+            row += 1
+
+    return (jnp.asarray(pos_r, jnp.int32),
+            jnp.asarray(dstrel_r, jnp.int32),
+            jnp.asarray(valid_r, jnp.int32),
+            jnp.asarray(ctile, jnp.int32),
+            block_pad)
 
 
 def build_msg_tiled_layout(recv_idx, block: int, *, vb: int = 128,
@@ -57,19 +103,25 @@ def build_msg_tiled_layout(recv_idx, block: int, *, vb: int = 128,
 
 
 @partial(jax.jit, static_argnames=("vb", "eb", "interpret"))
-def merge_scatter_pallas(dist, incoming_flat, pos_t, dstrel_t, valid_t, *,
-                         vb: int = 128, eb: int = 512,
+def merge_scatter_pallas(dist, incoming_flat, pos_t, dstrel_t, valid_t,
+                         ctile=None, *, vb: int = 128, eb: int = 512,
                          interpret: bool = True):
     """Solver-facing wrapper: pads to kernel tile shapes, slices back.
 
     dist: [K, block]; incoming_flat: [K, M] flattened bucketed messages.
-    Returns (new_dist [K, block], new_active [K, block] bool,
-    recvs [K] i32)."""
-    n_vtiles = pos_t.shape[0]
+    With ``ctile`` given, the layout arrays are the flat ragged rows from
+    ``build_msg_ragged_layout``. Returns (new_dist [K, block],
+    new_active [K, block] bool, recvs [K] i32)."""
     nq, block = dist.shape
+    n_vtiles = pos_t.shape[0] if ctile is None else max(-(-block // vb), 1)
     bp = n_vtiles * vb
     dist_pad = jnp.full((nq, bp), INF).at[:, :block].set(dist)
-    new, front, recvs = merge_scatter_tiled(
-        dist_pad, incoming_flat, pos_t, dstrel_t, valid_t, vb=vb, eb=eb,
-        interpret=interpret)
+    if ctile is None:
+        new, front, recvs = merge_scatter_tiled(
+            dist_pad, incoming_flat, pos_t, dstrel_t, valid_t, vb=vb, eb=eb,
+            interpret=interpret)
+    else:
+        new, front, recvs = merge_scatter_ragged(
+            dist_pad, incoming_flat, ctile, pos_t, dstrel_t, valid_t, vb=vb,
+            eb=eb, interpret=interpret)
     return new[:, :block], front[:, :block] > 0, recvs

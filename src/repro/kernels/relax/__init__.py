@@ -1,5 +1,6 @@
 from repro.kernels.relax.ops import (
-    build_dst_tiled_layout, relax_fixpoint_batch_pallas, relax_fixpoint_pallas,
-    relax_jnp, relax_masked_pallas, relax_pallas,
+    build_dst_ragged_layout, build_dst_tiled_layout,
+    relax_fixpoint_batch_pallas, relax_fixpoint_batch_ragged_pallas,
+    relax_fixpoint_pallas, relax_jnp, relax_masked_pallas, relax_pallas,
 )
 from repro.kernels.relax.ref import relax_ref

@@ -8,7 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.relax.relax import (
-    relax_dst_tiled, relax_dst_tiled_fixpoint, relax_dst_tiled_fixpoint_batch,
+    relax_dst_ragged_fixpoint_batch, relax_dst_tiled,
+    relax_dst_tiled_fixpoint, relax_dst_tiled_fixpoint_batch,
     relax_dst_tiled_masked,
 )
 
@@ -64,6 +65,66 @@ def build_dst_tiled_layout(src, dst, w, n_vertices: int, *, vb: int = 128,
     return out + (block_pad,)
 
 
+def build_dst_ragged_layout(src, dst, w, n_vertices: int, *, vb: int = 128,
+                            eb: int = 512, with_eid: bool = False):
+    """CSR-chunked (ragged) dst layout: edges -> [total_chunks, EB] rows
+    plus a [total_chunks] chunk→tile map.
+
+    Same stable dst-sort and per-tile EB split as ``build_dst_tiled_layout``
+    — chunk CONTENTS are identical; only the worst-case padding chunks of
+    under-full tiles are dropped, so ``total_chunks = sum_t ceil(count_t /
+    EB)`` instead of ``n_vtiles * max_t ceil(count_t / EB)``. Built
+    directly (never materializes the dense array), so a skewed 10M-edge
+    tile histogram costs O(edges), not O(worst case × tiles).
+
+    Returns (src_r, w_r, dstrel_r[, eid_r], ctile, block_pad). Padding
+    entries inside a partly-filled chunk mirror the dense builder (src =
+    block_pad - 1, w = +inf, eid sentinel = len(src)).
+    """
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    w = np.asarray(w, np.float32)
+    n_edges = len(src)
+    eid = np.arange(n_edges, dtype=np.int64)
+    keep = np.isfinite(w)
+    src, dst, w, eid = src[keep], dst[keep], w[keep], eid[keep]
+
+    n_vtiles = max(-(-n_vertices // vb), 1)
+    block_pad = n_vtiles * vb
+    order = np.argsort(dst, kind="stable")
+    src, dst, w, eid = src[order], dst[order], w[order], eid[order]
+    tile_of = dst // vb
+    counts = np.bincount(tile_of, minlength=n_vtiles)
+    chunks_per_tile = -(-counts // eb)                 # ceil, 0 for empty tiles
+    total_chunks = max(int(chunks_per_tile.sum()), 1)
+
+    src_r = np.full((total_chunks, eb), block_pad - 1, np.int64)
+    w_r = np.full((total_chunks, eb), np.inf, np.float32)
+    dstrel_r = np.zeros((total_chunks, eb), np.int64)
+    eid_r = np.full((total_chunks, eb), n_edges, np.int64)
+    ctile = np.full(total_chunks, n_vtiles, np.int64)  # sentinel: inert chunk
+    starts = np.zeros(n_vtiles + 1, np.int64)
+    starts[1:] = np.cumsum(counts)
+    row = 0
+    for t in range(n_vtiles):
+        lo, hi = starts[t], starts[t + 1]
+        for off in range(lo, hi, eb):
+            k = min(eb, hi - off)
+            src_r[row, :k] = src[off:off + k]
+            w_r[row, :k] = w[off:off + k]
+            dstrel_r[row, :k] = dst[off:off + k] - t * vb
+            eid_r[row, :k] = eid[off:off + k]
+            ctile[row] = t
+            row += 1
+
+    out = (jnp.asarray(src_r, jnp.int32),
+           jnp.asarray(w_r, jnp.float32),
+           jnp.asarray(dstrel_r, jnp.int32))
+    if with_eid:
+        out = out + (jnp.asarray(eid_r, jnp.int32),)
+    return out + (jnp.asarray(ctile, jnp.int32), block_pad)
+
+
 @partial(jax.jit, static_argnames=("vb", "eb", "interpret"))
 def relax_pallas(dist_pad, src_t, w_t, dstrel_t, *, vb: int = 128,
                  eb: int = 512, interpret: bool = True):
@@ -104,6 +165,20 @@ def relax_fixpoint_batch_pallas(dist_pad, front_pad, src_t, w_t, dstrel_t,
     return relax_dst_tiled_fixpoint_batch(
         dist_pad, front_pad, src_t, w_t, dstrel_t, pruned_t, vb=vb, eb=eb,
         n_sweeps=n_sweeps, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("vb", "eb", "n_sweeps", "interpret"))
+def relax_fixpoint_batch_ragged_pallas(dist_pad, front_pad, ctile, src_r, w_r,
+                                       dstrel_r, pruned_r, *, vb: int = 128,
+                                       eb: int = 512, n_sweeps: int = 8,
+                                       interpret: bool = True):
+    """Ragged-grid batched fused solve (CSR-chunked layout + chunk→tile map).
+
+    Same contract as ``relax_fixpoint_batch_pallas`` with the flat
+    [total_chunks, EB] layout from ``build_dst_ragged_layout``."""
+    return relax_dst_ragged_fixpoint_batch(
+        dist_pad, front_pad, ctile, src_r, w_r, dstrel_r, pruned_r, vb=vb,
+        eb=eb, n_sweeps=n_sweeps, interpret=interpret)
 
 
 @jax.jit

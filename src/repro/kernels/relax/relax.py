@@ -385,3 +385,120 @@ def relax_dst_tiled_fixpoint_batch(dist_pad, front_pad, src_t, w_t, dstrel_t,
         ],
         interpret=interpret,
     )(dist_pad, front_pad, src_t, w_t, dstrel_t, pruned_t)
+
+
+def _edge_chunk_ragged(src_ref, w_ref, dstrel_ref, pruned_ref):
+    """Load one [EB] chunk row of a ragged (flat-chunk) layout."""
+    src = src_ref[0, :]
+    w = jnp.where(pruned_ref[0, :] > 0, INF, w_ref[0, :])
+    dstrel = dstrel_ref[0, :]
+    return src, w, dstrel
+
+
+def _relax_ragged_fixpoint_batch_kernel(ctile_ref, dist_ref, front_ref,
+                                        src_ref, w_ref, dstrel_ref,
+                                        pruned_ref, out_ref, resid_ref,
+                                        nrel_ref, prev_ref, fcur_ref,
+                                        active_ref, count_ref, *, vb: int,
+                                        n_vtiles: int, total_chunks: int,
+                                        n_sweeps: int):
+    """Ragged-grid batched fixpoint. Grid (sweep, chunk, query): the vertex
+    tile axis of the dense kernel is gone — each flat chunk carries its
+    destination tile in the scalar-prefetched ``ctile`` map, so padding
+    chunks of under-full tiles are never scheduled. Inert padding chunks
+    (stacking shards to a common chunk count) carry w=+inf and the
+    out-of-range tile sentinel ``n_vtiles``, clamped here to a valid tile:
+    their min-accumulation is a no-op, preserving bit-identity with the
+    dense schedule (same stable dst-sorted chunk sequence, minus no-ops)."""
+    s = pl.program_id(0)
+    c = pl.program_id(1)
+    q = pl.program_id(2)
+    t = jnp.minimum(ctile_ref[c], n_vtiles - 1)
+    first = (s == 0) & (c == 0)
+    sweep_start = (c == 0)
+    last = (s == n_sweeps - 1) & (c == total_chunks - 1)
+    qrow = pl.dslice(q, 1)
+
+    @pl.when(first)
+    def _init():
+        out_ref[qrow, :] = dist_ref[qrow, :]
+        prev_ref[qrow, :] = dist_ref[qrow, :]
+        fcur_ref[qrow, :] = front_ref[qrow, :]
+        active_ref[q] = jnp.any(front_ref[qrow, :] > 0).astype(jnp.int32)
+        count_ref[q] = 0
+
+    @pl.when(sweep_start & (s > 0) & (active_ref[q] > 0))
+    def _advance_frontier():
+        newf = (out_ref[qrow, :] < prev_ref[qrow, :]).astype(jnp.float32)
+        fcur_ref[qrow, :] = newf
+        active_ref[q] = jnp.any(newf > 0).astype(jnp.int32)
+        prev_ref[qrow, :] = out_ref[qrow, :]
+
+    @pl.when(active_ref[q] > 0)
+    def _relax():
+        src, w, dstrel = _edge_chunk_ragged(src_ref, w_ref, dstrel_ref,
+                                            pruned_ref)
+        f_src = jnp.take(fcur_ref[qrow, :][0], src) > 0
+        d_src = jnp.take(out_ref[qrow, :][0], src)
+        cand = jnp.where(f_src, d_src + w, INF)
+        count_ref[q] = count_ref[q] + jnp.sum(f_src & (w < INF)).astype(jnp.int32)
+        mins = _tile_min(cand, dstrel, vb=vb)
+        cur = out_ref[qrow, pl.dslice(t * vb, vb)]
+        out_ref[qrow, pl.dslice(t * vb, vb)] = jnp.minimum(cur, mins)
+
+    @pl.when(last)
+    def _fin():
+        resid_ref[qrow, :] = (out_ref[qrow, :] < prev_ref[qrow, :]).astype(
+            jnp.float32)
+        nrel_ref[q] = count_ref[q]
+
+
+def relax_dst_ragged_fixpoint_batch(dist_pad, front_pad, ctile, src_r, w_r,
+                                    dstrel_r, pruned_r, *, vb: int, eb: int,
+                                    n_sweeps: int, interpret: bool = True):
+    """Ragged counterpart of ``relax_dst_tiled_fixpoint_batch``.
+
+    ``src_r``/``w_r``/``dstrel_r``/``pruned_r`` are [total_chunks, EB] flat
+    CSR-chunked rows; ``ctile`` is the [total_chunks] int32 chunk→tile map
+    (sentinel ``n_vtiles`` marks inert padding chunks). The grid has
+    ``total_chunks = sum_t ceil(count_t / EB)`` steps per sweep instead of
+    the dense ``n_vtiles * max_t ceil(count_t / EB)`` — on skewed
+    (power-law) tiles that is the whole memory/compute win."""
+    total_chunks, eb_l = src_r.shape
+    nq, bp = dist_pad.shape
+    assert eb_l == eb and bp % vb == 0
+    n_vtiles = bp // vb
+
+    grid = (n_sweeps, total_chunks, nq)
+    full_spec = pl.BlockSpec((nq, bp), lambda s, c, q, ctile: (0, 0))
+    edge_spec = pl.BlockSpec((1, eb), lambda s, c, q, ctile: (c, 0))
+    kernel = functools.partial(_relax_ragged_fixpoint_batch_kernel, vb=vb,
+                               n_vtiles=n_vtiles, total_chunks=total_chunks,
+                               n_sweeps=n_sweeps)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[full_spec, full_spec,
+                  edge_spec, edge_spec, edge_spec, edge_spec],
+        out_specs=[
+            full_spec,                                       # live distances
+            full_spec,                                       # residual frontiers
+            pl.BlockSpec((nq,), lambda s, c, q, ctile: (0,)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((nq, bp), jnp.float32),
+            pltpu.VMEM((nq, bp), jnp.float32),
+            pltpu.SMEM((nq,), jnp.int32),
+            pltpu.SMEM((nq,), jnp.int32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, bp), dist_pad.dtype),
+            jax.ShapeDtypeStruct((nq, bp), jnp.float32),
+            jax.ShapeDtypeStruct((nq,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ctile, dist_pad, front_pad, src_r, w_r, dstrel_r, pruned_r)

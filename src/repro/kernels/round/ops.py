@@ -19,9 +19,11 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.relax import relax_fixpoint_batch_pallas
-from repro.kernels.round.round import fused_round_tiled
-from repro.kernels.send.send import send_pack_tiled
+from repro.kernels.relax import (
+    relax_fixpoint_batch_pallas, relax_fixpoint_batch_ragged_pallas,
+)
+from repro.kernels.round.round import fused_round_ragged, fused_round_tiled
+from repro.kernels.send.send import send_pack_ragged, send_pack_tiled
 
 INF = float("inf")
 
@@ -62,18 +64,34 @@ def fused_round_pallas(dist, front_in, live, incoming, last_sent, slot_valid,
 
     Returns (new_dist [K, block], send_val [K, S], new_last [K, S],
     nrel [K], sends [K], resid [K, block] f32 — non-empty rows mean the
-    in-kernel sweeps did not converge and the caller must rescue)."""
-    rx_src, rx_w, rx_dst, rx_eid = relax_layout
-    tx_src, tx_w, tx_seg, tx_eid = send_layout
+    in-kernel sweeps did not converge and the caller must rescue).
+
+    Ragged (CSR-chunked) shards pass 5-tuple relax/send layouts (flat
+    chunk rows + chunk→tile map) and a 4-tuple merge layout; the tuple
+    arity selects the ragged megakernel."""
+    ragged = len(relax_layout) == 5
+    if ragged:
+        rx_src, rx_w, rx_dst, rx_eid, rx_ct = relax_layout
+        tx_src, tx_w, tx_seg, tx_eid, tx_ct = send_layout
+    else:
+        rx_src, rx_w, rx_dst, rx_eid = relax_layout
+        tx_src, tx_w, tx_seg, tx_eid = send_layout
     nq, block = dist.shape
     n_slots = last_sent.shape[1]
-    bp = rx_src.shape[0] * vb
-    sp = tx_src.shape[0] * sb
+    if ragged:
+        bp = max(-(-block // vb), 1) * vb
+        sp = max(-(-n_slots // sb), 1) * sb
+    else:
+        bp = rx_src.shape[0] * vb
+        sp = tx_src.shape[0] * sb
 
     dist_pad, front_pad, live_f, last_pad, valid_pad = _pad_state(
         dist, front_in, live, last_sent, slot_valid, bp=bp, sp=sp)
     rx = (rx_src, rx_w, rx_dst, _gather_pruned(pruned_loc, rx_eid))
     tx = (tx_src, tx_w, tx_seg, _gather_pruned(pruned_cut, tx_eid))
+    if ragged:
+        rx = rx + (rx_ct,)
+        tx = tx + (tx_ct,)
     if dense:
         inc = jnp.full((nq, bp), INF, jnp.float32).at[:, :block].set(incoming)
         mx = None
@@ -81,7 +99,8 @@ def fused_round_pallas(dist, front_in, live, incoming, last_sent, slot_valid,
         inc = incoming
         mx = merge_layout
 
-    out, resid, sval, nlast, nrel, sends = fused_round_tiled(
+    round_fn = fused_round_ragged if ragged else fused_round_tiled
+    out, resid, sval, nlast, nrel, sends = round_fn(
         dist_pad, front_pad, live_f, inc, last_pad, valid_pad, mx, rx, tx,
         vb=vb, sb=sb, n_sweeps=n_sweeps, dense=dense, interpret=interpret)
     return (out[:, :block], sval[:, :n_slots], nlast[:, :n_slots], nrel,
@@ -102,14 +121,23 @@ def fused_round_rescue(dist, resid, last_sent, slot_valid, relax_layout,
     like the staged pipeline's outer loop) and re-packs the sends against
     the original ``last_sent``. Returns (new_dist [K, block],
     send_val [K, S], new_last [K, S], nrel_extra [K], sends [K])."""
-    rx_src, rx_w, rx_dst, rx_eid = relax_layout
-    tx_src, tx_w, tx_seg, tx_eid = send_layout
-    _, _, rx_eb = rx_src.shape
-    _, _, tx_eb = tx_src.shape
+    ragged = len(relax_layout) == 5
+    if ragged:
+        rx_src, rx_w, rx_dst, rx_eid, rx_ct = relax_layout
+        tx_src, tx_w, tx_seg, tx_eid, tx_ct = send_layout
+    else:
+        rx_src, rx_w, rx_dst, rx_eid = relax_layout
+        tx_src, tx_w, tx_seg, tx_eid = send_layout
+    rx_eb = rx_src.shape[-1]
+    tx_eb = tx_src.shape[-1]
     nq, block = dist.shape
     n_slots = last_sent.shape[1]
-    bp = rx_src.shape[0] * vb
-    sp = tx_src.shape[0] * sb
+    if ragged:
+        bp = max(-(-block // vb), 1) * vb
+        sp = max(-(-n_slots // sb), 1) * sb
+    else:
+        bp = rx_src.shape[0] * vb
+        sp = tx_src.shape[0] * sb
 
     dist_pad, front_pad, _, last_pad, valid_pad = _pad_state(
         dist, resid, jnp.ones((nq,), bool), last_sent, slot_valid, bp=bp,
@@ -123,16 +151,26 @@ def fused_round_rescue(dist, resid, last_sent, slot_valid, relax_layout,
 
     def body(c):
         d, front, n, it = c
-        nd, rs, k = relax_fixpoint_batch_pallas(
-            d, front, rx_src, rx_w, rx_dst, prn_rx, vb=vb, eb=rx_eb,
-            n_sweeps=n_sweeps, interpret=interpret)
+        if ragged:
+            nd, rs, k = relax_fixpoint_batch_ragged_pallas(
+                d, front, rx_ct, rx_src, rx_w, rx_dst, prn_rx, vb=vb,
+                eb=rx_eb, n_sweeps=n_sweeps, interpret=interpret)
+        else:
+            nd, rs, k = relax_fixpoint_batch_pallas(
+                d, front, rx_src, rx_w, rx_dst, prn_rx, vb=vb, eb=rx_eb,
+                n_sweeps=n_sweeps, interpret=interpret)
         return nd, rs, n + k, it + jnp.int32(n_sweeps)
 
     d2, _, nrel_extra, _ = jax.lax.while_loop(
         cond, body, (dist_pad, front_pad, jnp.zeros((nq,), jnp.int32),
                      jnp.int32(n_sweeps)))
-    sval, nlast, sends = send_pack_tiled(
-        d2, last_pad, valid_pad, tx_src, tx_w, tx_seg, prn_tx, sb=sb,
-        eb=tx_eb, interpret=interpret)
+    if ragged:
+        sval, nlast, sends = send_pack_ragged(
+            d2, last_pad, valid_pad, tx_ct, tx_src, tx_w, tx_seg, prn_tx,
+            sb=sb, eb=tx_eb, interpret=interpret)
+    else:
+        sval, nlast, sends = send_pack_tiled(
+            d2, last_pad, valid_pad, tx_src, tx_w, tx_seg, prn_tx, sb=sb,
+            eb=tx_eb, interpret=interpret)
     return (d2[:, :block], sval[:, :n_slots], nlast[:, :n_slots], nrel_extra,
             sends)

@@ -1,4 +1,5 @@
 from repro.kernels.send.ops import (
-    build_slot_tiled_layout, send_pack_pallas, send_payload_bucket,
+    build_slot_ragged_layout, build_slot_tiled_layout, send_pack_pallas,
+    send_payload_bucket,
 )
 from repro.kernels.send.ref import send_pack_ref

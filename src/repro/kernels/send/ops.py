@@ -7,10 +7,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.relax import build_dst_tiled_layout
-from repro.kernels.send.send import send_pack_tiled
+from repro.kernels.relax import build_dst_ragged_layout, build_dst_tiled_layout
+from repro.kernels.send.send import send_pack_ragged, send_pack_tiled
 
 INF = float("inf")
+
+
+def build_slot_ragged_layout(cut_src, cut_seg, cut_w, n_slots: int, *,
+                             sb: int = 128, eb: int = 512):
+    """Ragged (CSR-chunked) slot layout: cut edges -> flat [total_chunks,
+    EB] rows + [total_chunks] chunk→tile map, same slot-in-destination-role
+    reuse of the relax builder as ``build_slot_tiled_layout`` (padding
+    sources restamped to 0 — in range, inert via +inf weight).
+
+    Returns (src_r, w_r, segrel_r, eid_r, ctile, S_pad)."""
+    src_r, w_r, segrel_r, eid_r, ctile, s_pad = build_dst_ragged_layout(
+        cut_src, cut_seg, cut_w, n_slots, vb=sb, eb=eb, with_eid=True)
+    pad = eid_r == len(np.asarray(cut_src))
+    src_r = jnp.where(pad, 0, src_r)
+    return src_r, w_r, segrel_r, eid_r, ctile, s_pad
 
 
 def build_slot_tiled_layout(cut_src, cut_seg, cut_w, n_slots: int, *,
@@ -39,27 +54,33 @@ def build_slot_tiled_layout(cut_src, cut_seg, cut_w, n_slots: int, *,
 
 @partial(jax.jit, static_argnames=("sb", "eb", "interpret"))
 def send_pack_pallas(dist, last_sent, slot_valid, src_t, w_t, segrel_t,
-                     pruned_t, *, sb: int = 128, eb: int = 512,
+                     pruned_t, ctile=None, *, sb: int = 128, eb: int = 512,
                      interpret: bool = True):
     """Solver-facing wrapper: pads to kernel tile shapes, slices back.
 
     dist: [K, block]; last_sent: [K, S]; slot_valid: [S] bool;
     src_t/w_t/segrel_t/pruned_t: [n_stiles, n_chunks, EB] slot-tiled layout
-    (pruned_t already gathered into tiled order). Returns
+    (pruned_t already gathered into tiled order), or — with ``ctile`` given
+    — flat [total_chunks, EB] ragged rows plus the chunk→tile map. Returns
     (send_val [K, S] — INF where not improved, new_last [K, S], sends [K]).
     """
-    n_stiles, _, _ = src_t.shape
     nq, block = dist.shape
     S = last_sent.shape[1]
+    n_stiles = src_t.shape[0] if ctile is None else max(-(-S // sb), 1)
     sp = n_stiles * sb
     bp = -(-block // 128) * 128      # lane-align the gathered distance row
     dist_pad = jnp.full((nq, bp), INF).at[:, :block].set(dist)
     last_pad = jnp.full((nq, sp), INF).at[:, :S].set(last_sent)
     valid_pad = jnp.zeros((sp,), jnp.int32).at[:S].set(
         slot_valid.astype(jnp.int32))
-    val, new_last, sends = send_pack_tiled(
-        dist_pad, last_pad, valid_pad, src_t, w_t, segrel_t, pruned_t,
-        sb=sb, eb=eb, interpret=interpret)
+    if ctile is None:
+        val, new_last, sends = send_pack_tiled(
+            dist_pad, last_pad, valid_pad, src_t, w_t, segrel_t, pruned_t,
+            sb=sb, eb=eb, interpret=interpret)
+    else:
+        val, new_last, sends = send_pack_ragged(
+            dist_pad, last_pad, valid_pad, ctile, src_t, w_t, segrel_t,
+            pruned_t, sb=sb, eb=eb, interpret=interpret)
     return val[:, :S], new_last[:, :S], sends
 
 

@@ -141,3 +141,93 @@ def send_pack_tiled(dist_pad, last_pad, valid_pad, src_t, w_t, segrel_t,
         scratch_shapes=[pltpu.SMEM((nq,), jnp.int32)],
         interpret=interpret,
     )(dist_pad, last_pad, valid_pad, src_t, w_t, segrel_t, pruned_t)
+
+
+def _send_pack_ragged_kernel(ctile_ref, dist_ref, last_ref, valid_ref,
+                             src_ref, w_ref, segrel_ref, pruned_ref, val_ref,
+                             newlast_ref, sends_ref, *, sb: int,
+                             n_stiles: int, total_chunks: int,
+                             n_queries: int):
+    """Ragged grid ``(total_chunks,)``: each flat chunk carries its slot
+    tile in the scalar-prefetched ``ctile`` map. Init/finalize move from
+    per-tile to GLOBAL (whole [K, S_pad] at the first/last chunk): the
+    accumulate step never reads the improvement mask, so finalizing every
+    tile at once — after all its chunks necessarily streamed — produces
+    bit-identical send values, and zero-chunk tiles (absent from the ragged
+    chunk list entirely) still get their INF/no-improvement finalization."""
+    c = pl.program_id(0)
+    t = jnp.minimum(ctile_ref[c], n_stiles - 1)
+    tile = pl.dslice(t * sb, sb)
+
+    @pl.when(c == 0)
+    def _init():
+        val_ref[...] = jnp.full(val_ref.shape, INF, jnp.float32)
+
+    src = src_ref[0, :]                       # [EB] int32 (padding = 0)
+    w = jnp.where(pruned_ref[0, :] > 0, INF, w_ref[0, :])
+    segrel = segrel_ref[0, :]                 # [EB] int32 in [0, sb)
+    d_src = jnp.take(dist_ref[...], src, axis=1)      # [K, EB]
+    cand = d_src + w[None, :]
+    mins = tile_min_batch(cand, segrel, width=sb)     # [K, sb]
+    val_ref[:, tile] = jnp.minimum(val_ref[:, tile], mins)
+
+    @pl.when(c == total_chunks - 1)
+    def _fin():
+        val = val_ref[...]                            # [K, S_pad]
+        prev = last_ref[...]
+        valid = valid_ref[...][None, :] > 0
+        improved = valid & (val < prev)
+        val_ref[...] = jnp.where(improved, val, INF)
+        newlast_ref[...] = jnp.where(improved, val, prev)
+        sums = jnp.sum(improved, axis=1).astype(jnp.int32)
+        for k in range(n_queries):
+            sends_ref[k] = sums[k]
+
+
+def send_pack_ragged(dist_pad, last_pad, valid_pad, ctile, src_r, w_r,
+                     segrel_r, pruned_r, *, sb: int, eb: int,
+                     interpret: bool = True):
+    """Ragged counterpart of ``send_pack_tiled``: the slot-tiled layout is
+    flat [total_chunks, EB] rows plus the [total_chunks] chunk→tile map
+    (sentinel ``n_stiles`` marks inert padding chunks, clamped in-kernel).
+    ``S_pad`` comes from ``last_pad`` since the layout no longer encodes the
+    tile count. Same returns as the dense kernel."""
+    total_chunks, eb_l = src_r.shape
+    nq, bp = dist_pad.shape
+    sp = last_pad.shape[1]
+    assert eb_l == eb and sp % sb == 0
+    assert valid_pad.shape == (sp,)
+    n_stiles = sp // sb
+
+    grid = (total_chunks,)
+    dist_spec = pl.BlockSpec((nq, bp), lambda c, ctile: (0, 0))
+    slot_spec = pl.BlockSpec((nq, sp), lambda c, ctile: (0, 0))
+    edge_spec = pl.BlockSpec((1, eb), lambda c, ctile: (c, 0))
+    kernel = functools.partial(_send_pack_ragged_kernel, sb=sb,
+                               n_stiles=n_stiles, total_chunks=total_chunks,
+                               n_queries=nq)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            dist_spec,
+            slot_spec,
+            pl.BlockSpec((sp,), lambda c, ctile: (0,)),
+            edge_spec, edge_spec, edge_spec, edge_spec,
+        ],
+        out_specs=[
+            slot_spec,                                     # masked send values
+            slot_spec,                                     # updated last_sent
+            pl.BlockSpec((nq,), lambda c, ctile: (0,)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, sp), jnp.float32),
+            jax.ShapeDtypeStruct((nq, sp), jnp.float32),
+            jax.ShapeDtypeStruct((nq,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ctile, dist_pad, last_pad, valid_pad, src_r, w_r, segrel_r, pruned_r)
